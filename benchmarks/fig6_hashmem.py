@@ -1,0 +1,94 @@
+"""Paper Fig. 6: HashMem speedups vs CPU baselines.
+
+Validation logic (EXPERIMENTS.md §Paper-validation): the paper publishes six
+speedups (area/perf x map/unordered/hopscotch) but no absolute times.  Our
+DDR4 model fixes the subarray latencies from JEDEC timings:
+
+    t_scan(area) = tRCD + 381 * tCCD_S + latch   (avg occupancy of the
+                    100M-pair workload over 2^18 buckets = 381 slots)
+    t_cam(perf)  = tRCD + 2 ticks + latch
+
+One calibrated variant-independent overhead (T_OVERHEAD_NS = 470 ns, the MC
+command + translation + LLC delivery path) then makes ALL SIX paper numbers
+mutually consistent: the CPU times implied by the area column equal the CPU
+times implied by the perf column to <0.5%.  That rank-1 consistency is the
+reproduction check; this module computes it, plus:
+
+  * measured-CPU speedups on this container (fig5 structures),
+  * beyond-paper overlapped-probe throughput (tFAW/channel bound analysis)
+    and the §6 channel-parallelism scaling the paper lists as future work.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import timing_model as tm
+from benchmarks.fig5_cpu_baselines import run as fig5_run
+
+PAPER_SPEEDUPS = {
+    "std_map": {"area": 17.1, "perf": 49.1},
+    "unordered_map": {"area": 5.5, "perf": 15.8},
+    "hopscotch_map": {"area": 3.2, "perf": 9.2},
+}
+
+# paper workload geometry: 100M pairs over 2^18 buckets x 512 slots
+PAPER_AVG_OCCUPANCY = 100_000_000 / (1 << 18)     # ~381 live slots per row
+
+
+def run(measured_cpu=None):
+    rows = []
+    lat = {v: tm.hashmem_latency_ns(v, PAPER_AVG_OCCUPANCY)
+           for v in ("area", "perf", "bitserial")}
+    for v, t in lat.items():
+        rows.append({"name": f"fig6_latency_{v}", "t_ns": round(t, 1)})
+
+    # --- paper-consistency reproduction ---
+    for base, sp in PAPER_SPEEDUPS.items():
+        cpu_from_area = sp["area"] * lat["area"]
+        cpu_from_perf = sp["perf"] * lat["perf"]
+        err = abs(cpu_from_area - cpu_from_perf) / cpu_from_perf
+        implied = 0.5 * (cpu_from_area + cpu_from_perf)
+        rows.append({
+            "name": f"fig6_implied_cpu_{base}",
+            "implied_cpu_ns": round(implied, 0),
+            "consistency_err": round(err, 4),
+            "repro_area_x": round(implied / lat["area"], 1),
+            "paper_area_x": sp["area"],
+            "repro_perf_x": round(implied / lat["perf"], 1),
+            "paper_perf_x": sp["perf"],
+        })
+
+    # --- measured-CPU speedups (this container) ---
+    measured = measured_cpu or fig5_run(n=1 << 20)
+    for m in measured:
+        r = {"name": f"fig6_measured_{m['name'].replace('fig5_', '')}"}
+        for v in ("area", "perf"):
+            r[f"speedup_{v}"] = round(m["us_per_probe"] * 1e3 / lat[v], 1)
+        rows.append(r)
+
+    # --- beyond-paper: overlapped throughput + channel scaling (§6) ---
+    for v in ("area", "perf", "bitserial"):
+        t = tm.hashmem_throughput(v, PAPER_AVG_OCCUPANCY)
+        rows.append({"name": f"fig6_overlapped_{v}",
+                     "rate_mps": round(t["rate_mps"], 1),
+                     "ns_per_probe": round(t["ns_per_probe"], 2),
+                     "bound": t["bound"]})
+    for ch in (1, 2, 4, 8):
+        t = tm.hashmem_throughput("perf", PAPER_AVG_OCCUPANCY, channels=ch)
+        rows.append({"name": f"fig6_channels_{ch}",
+                     "rate_mps": round(t["rate_mps"], 1),
+                     "bound": t["bound"]})
+
+    # --- bit-serial crossover (paper column widths; DESIGN.md §2) ---
+    for bits in (4, 8, 16, 32):
+        t = tm.hashmem_latency_ns("bitserial", PAPER_AVG_OCCUPANCY,
+                                  key_bits=bits)
+        rows.append({"name": f"fig6_bitserial_{bits}b",
+                     "t_ns": round(t, 1),
+                     "vs_perf": round(t / lat["perf"], 3)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,68 @@
+"""TPU probe-kernel analysis: VMEM footprints (the paper-§4.3 'area overhead'
+analogue on TPU) + interpret-mode correctness throughput on CPU.
+
+On-TPU wall-clock is not available in this container; the structural numbers
+(bytes of BlockSpec tiles per grid step, vector ops per probe) come from the
+kernel definitions and are the quantities a Mosaic schedule would be built
+around (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HashMemConfig
+from repro.core import hashmap
+
+VMEM_BYTES = 128 * 1024 * 1024  # v5e VMEM per core
+
+
+def vmem_footprint(slots: int, key_bits: int = 32):
+    """Bytes resident per grid step for each kernel variant."""
+    row = slots * 4                       # uint32 keys
+    vals = slots * 4
+    line = 128 * 4
+    planes = key_bits * (slots // 32) * 4
+    return {
+        "perf": row + vals + line,
+        "area": row + vals + line,
+        "bitserial": planes + vals + line,
+    }
+
+
+def run(slots: int = 512, Q: int = 256):
+    rows = []
+    fp = vmem_footprint(slots)
+    for v, b in fp.items():
+        rows.append({"name": f"kernel_vmem_{v}", "bytes_per_step": b,
+                     "frac_of_vmem": b / VMEM_BYTES,
+                     "vector_ops_per_probe":
+                         {"perf": 2, "area": slots // 128, "bitserial": 32 + 3}[v]})
+    # interpret-mode throughput (correctness-path timing only)
+    cfg = HashMemConfig(num_buckets=64, slots_per_page=slots,
+                        overflow_pages=64, max_chain=2, backend="ref")
+    rng = np.random.default_rng(0)
+    n = 64 * slots // 2
+    keys = rng.choice(2**31, n, replace=False).astype(np.uint32)
+    hm = hashmap.build(cfg, jnp.asarray(keys), jnp.asarray(keys))
+    q = jnp.asarray(keys[:Q])
+    for backend in ("ref", "perf", "area", "bitserial"):
+        hm2 = hashmap.build(
+            HashMemConfig(num_buckets=64, slots_per_page=slots,
+                          overflow_pages=64, max_chain=2, backend=backend),
+            jnp.asarray(keys), jnp.asarray(keys))
+        vfn = lambda: hashmap.probe(hm2, q)[0].block_until_ready()
+        vfn()  # compile
+        t0 = time.perf_counter()
+        vfn()
+        dt = time.perf_counter() - t0
+        rows.append({"name": f"kernel_interpret_{backend}",
+                     "us_per_probe": dt / Q * 1e6})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

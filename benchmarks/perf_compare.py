@@ -1,0 +1,78 @@
+"""§Perf before/after: baseline artifacts vs REPRO_OPT artifacts."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.roofline import assemble_cell
+
+GB = 2**30
+
+
+def _full(art, arch, shape):
+    p = Path(art) / f"{arch}__{shape}__single__full.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def compare(cells, base="artifacts/dryrun_baseline", opt="artifacts/dryrun_opt"):
+    rows = []
+    for arch, shape in cells:
+        b = _full(base, arch, shape)
+        o = _full(opt, arch, shape)
+        rb = assemble_cell(Path(base), arch, shape)
+        ro = assemble_cell(Path(opt), arch, shape)
+        if not (b and o):
+            continue
+        rows.append({
+            "cell": f"{arch} x {shape}",
+            "temp_gb": (b.get("temp_size_in_bytes", 0) / GB,
+                        o.get("temp_size_in_bytes", 0) / GB),
+            "args_gb": (b.get("argument_size_in_bytes", 0) / GB,
+                        o.get("argument_size_in_bytes", 0) / GB),
+            "coll_full_gb": (
+                b.get("collectives", {}).get("total_bytes", 0) / GB,
+                o.get("collectives", {}).get("total_bytes", 0) / GB),
+            "coll_total_dev": (rb.get("coll_bytes_dev"), ro.get("coll_bytes_dev")),
+            "flops_dev": (rb.get("flops_dev"), ro.get("flops_dev")),
+            "bound": (rb.get("dominant"), ro.get("dominant")),
+            "bound_s": (rb.get("bound_s"), ro.get("bound_s")),
+            "roofline_frac": (rb.get("roofline_frac"), ro.get("roofline_frac")),
+            "fits": (rb.get("fits_16g"), ro.get("fits_16g")),
+        })
+    return rows
+
+
+def markdown(rows):
+    out = ["| cell | temp GB | args GB | coll GB (dev) | dominant | bound s | roofline frac | fits 16G |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        def pair(t, fmt="{:.2f}"):
+            a, b = t
+            fa = fmt.format(a) if isinstance(a, (int, float)) and a is not None else "—"
+            fb = fmt.format(b) if isinstance(b, (int, float)) and b is not None else "—"
+            return f"{fa} → {fb}"
+        out.append(
+            f"| {r['cell']} | {pair(r['temp_gb'])} | {pair(r['args_gb'])} | "
+            f"{pair(tuple((x or 0)/GB for x in r['coll_total_dev']), '{:.2f}')} | "
+            f"{r['bound'][0]} → {r['bound'][1]} | "
+            f"{pair(r['bound_s'], '{:.3g}')} | "
+            f"{pair(r['roofline_frac'], '{:.3f}')} | "
+            f"{r['fits'][0]} → {r['fits'][1]} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    cells = [
+        ("olmoe-1b-7b", "train_4k"), ("olmoe-1b-7b", "prefill_32k"),
+        ("llama4-maverick-400b-a17b", "train_4k"),
+        ("llama4-maverick-400b-a17b", "prefill_32k"),
+        ("jamba-v0.1-52b", "train_4k"),
+        ("llama3-8b", "decode_32k"), ("qwen3-8b", "decode_32k"),
+        ("phi4-mini-3.8b", "decode_32k"), ("internvl2-2b", "decode_32k"),
+        ("olmoe-1b-7b", "decode_32k"),
+        ("llama4-maverick-400b-a17b", "decode_32k"),
+        ("jamba-v0.1-52b", "decode_32k"), ("jamba-v0.1-52b", "long_500k"),
+        ("h2o-danube-1.8b", "long_500k"),
+        ("xlstm-1.3b", "train_4k"), ("whisper-tiny", "train_4k"),
+    ]
+    print(markdown(compare(cells)))

@@ -1,0 +1,111 @@
+"""Analytic DDR4 timing model for HashMem probes.
+
+The paper itself models HashMem from DRAM timing data of prior work
+(§4.1: "we analyzed the timing data gathered from prior works [1,6,7,14]")
+— it was never fabricated.  This module reproduces that methodology with
+explicit, auditable assumptions:
+
+  per-probe subarray latency
+    area-opt    : tRCD + ceil(occupied_slots) * tCCD_S + t_latch
+                  (element-serial walk at column-access cadence)
+    perf-opt    : tRCD + n_cam_ticks * t_tick   (whole row CAM compare,
+                  "single or small number of clock ticks", paper §2.2)
+    bit-serial  : tRCD + key_bits * t_tick      (one bit-plane per step)
+
+  end-to-end throughput for a probe stream
+    parallel service rate : n_subarrays / t_probe   (RLU spreads probes)
+    channel rate          : channel_BW / bus_bytes_per_probe
+                            (cmd+key down, padded cache line back, §2.5)
+    probes/s = min(parallel, channel)
+
+  CPU reference (paper's Xeon-class DRAM-bound probe)
+    t_cpu = accesses_per_probe * t_rand_access
+    where t_rand_access ≈ tRCD + tCAS + burst + queueing.
+
+All constants from the DDR4_8Gb_3200 column of the JEDEC/DRAMsim3 tables
+(configs/hashmem_paper.DDR4_TIMING).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.hashmem_paper import DDR4_TIMING as T
+
+N_BANKS = 8
+N_SUBARRAYS_PER_BANK = 128
+T_LATCH_NS = 5.0
+T_TICK_NS = 2.0          # CAM / bit-plane tick (500 MHz PIM clock)
+CAM_TICKS = 2
+BUS_BYTES_PER_PROBE = 8 + 64   # key+cmd down, padded cache line back
+RAND_ACCESS_QUEUE_NS = 55.0    # measured-average DRAM random access ~100ns
+T_FAW_NS = 21.25               # four-activation window (DDR4-3200)
+# Shared per-probe overhead (MC command + translation + result delivery to
+# LLC).  The paper's own area:perf speedup ratio (49.1/17.1 = 2.87x) together
+# with our subarray latencies implies ~470 ns of variant-independent overhead
+# in their (unpublished) model; we adopt that as the calibrated default and
+# expose it as a parameter.  See EXPERIMENTS.md §Paper-validation.
+T_OVERHEAD_NS = 470.0
+
+
+def probe_latency_ns(variant: str, occupied_slots: float, key_bits: int = 32,
+                     chain_pages: float = 1.0) -> float:
+    """Latency of one bucket traversal at the subarray (chain_pages rows)."""
+    act = T["tRCD"]
+    if variant == "area":
+        per_row = act + occupied_slots * T["tCCD_S"] + T_LATCH_NS
+    elif variant == "perf":
+        per_row = act + CAM_TICKS * T_TICK_NS + T_LATCH_NS
+    elif variant == "bitserial":
+        per_row = act + key_bits * T_TICK_NS + T_LATCH_NS
+    else:
+        raise ValueError(variant)
+    return per_row * chain_pages + T["tRP"]
+
+
+def hashmem_latency_ns(variant: str, occupied_slots: float,
+                       key_bits: int = 32, chain_pages: float = 1.0,
+                       overhead_ns: float = T_OVERHEAD_NS) -> float:
+    """End-to-end per-probe latency, probes served serially (the paper's
+    evaluation regime: per-probe speedup vs a serial CPU loop)."""
+    return overhead_ns + probe_latency_ns(variant, occupied_slots, key_bits,
+                                          chain_pages)
+
+
+def hashmem_throughput(variant: str, occupied_slots: float,
+                       key_bits: int = 32, chain_pages: float = 1.0,
+                       channels: int = 1) -> dict:
+    """Overlapped-probe throughput (beyond-paper analysis): the RLU keeps
+    many probes in flight; binding constraints are (a) PE occupancy across
+    subarrays, (b) the DDR4 activation-rate window tFAW, (c) channel BW for
+    command/result transfer (the paper's §6 channel-parallelism lever)."""
+    t_probe = probe_latency_ns(variant, occupied_slots, key_bits, chain_pages)
+    n_sub = N_BANKS * N_SUBARRAYS_PER_BANK * channels
+    pe_rate = n_sub / (t_probe * 1e-9)
+    act_rate = channels * 4 / (T_FAW_NS * 1e-9) / chain_pages
+    channel_rate = channels * T["channel_gbps"] * 1e9 / BUS_BYTES_PER_PROBE
+    rate = min(pe_rate, act_rate, channel_rate)
+    bound = {pe_rate: "subarray", act_rate: "tFAW", channel_rate: "channel"}
+    return {
+        "variant": variant,
+        "t_probe_ns": t_probe,
+        "pe_rate_mps": pe_rate / 1e6,
+        "act_rate_mps": act_rate / 1e6,
+        "channel_rate_mps": channel_rate / 1e6,
+        "rate_mps": rate / 1e6,
+        "ns_per_probe": 1e9 / rate,
+        "bound": bound[rate],
+    }
+
+
+def cpu_probe_ns(accesses_per_probe: float) -> float:
+    """DRAM-bound CPU probe model (cache-resident probability ~0 per §4.1.1)."""
+    t_access = T["tRCD"] + T["tCAS"] + T["burst_ns"] + RAND_ACCESS_QUEUE_NS
+    return accesses_per_probe * t_access
+
+
+# paper's software baselines, expressed as expected DRAM accesses per probe
+CPU_ACCESS_MODEL = {
+    "std_map": 26.6,        # red-black tree: log2(1e8) depth, all off-cache
+    "unordered_map": 3.0,   # bucket head + node + value indirection
+    "hopscotch_map": 1.6,   # open addressing, neighborhood usually 1 line
+}

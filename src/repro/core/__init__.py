@@ -1,0 +1,8 @@
+"""HashMem core: the paper's contribution as a composable JAX module."""
+from repro.core.hashing import (
+    EMPTY_KEY, TOMBSTONE_KEY, MAX_USER_KEY, hash_to_bucket, HASH_FNS,
+)
+from repro.core.hashmap import (
+    HashMem, create, build, build_check, insert, probe, delete,
+    resolve_pages, stats,
+)

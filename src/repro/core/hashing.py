@@ -1,0 +1,51 @@
+"""Hash-function family for HashMem (paper §2.5, §6 'Hash Function').
+
+All hashes operate on uint32 keys and return uint32 hashes; bucket selection
+is ``hash % num_buckets``.  uint32 arithmetic in JAX wraps (defined overflow),
+which is exactly what these mixers rely on.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+# Sentinels: user keys must be < 0xFFFFFFFE (enforced by callers/tests).
+EMPTY_KEY = jnp.uint32(0xFFFFFFFF)
+TOMBSTONE_KEY = jnp.uint32(0xFFFFFFFE)
+MAX_USER_KEY = 0xFFFFFFFD
+
+
+def murmur3_fmix(keys, salt: int = 0x9E3779B9):
+    """Murmur3 32-bit finalizer (full avalanche)."""
+    h = keys.astype(U32) ^ U32(salt)
+    h = h ^ (h >> 16)
+    h = h * U32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * U32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def mult_shift(keys, salt: int = 0x9E3779B9):
+    """Knuth multiplicative hash (weaker; exercises paper's Fig. 4 skew)."""
+    h = keys.astype(U32) * U32(2654435761)
+    return h ^ U32(salt)
+
+
+def identity(keys, salt: int = 0):
+    del salt
+    return keys.astype(U32)
+
+
+HASH_FNS = {
+    "murmur3_fmix": murmur3_fmix,
+    "mult_shift": mult_shift,
+    "identity": identity,
+}
+
+
+def hash_to_bucket(keys, num_buckets: int, fn: str = "murmur3_fmix", salt: int = 0x9E3779B9):
+    """keys (…,) uint32 -> bucket ids (…,) int32 in [0, num_buckets)."""
+    h = HASH_FNS[fn](keys, salt)
+    return (h % U32(num_buckets)).astype(jnp.int32)

@@ -1,0 +1,299 @@
+"""Functional HashMem structure (paper §2.4-2.5, §3).
+
+Semantics mirror the paper exactly:
+
+  * bucket i owns page i (bucket-per-row mapping); overflow pages are chained
+    through ``page_next`` — the paper's "bookkeeping structure ... attaches and
+    links new page to old page in a Linked List fashion".
+  * ``free_top`` is the ``pim_malloc`` bump allocator over the overflow arena.
+  * deletion writes TOMBSTONE_KEY "at the cost of wasted space" (paper §2.5):
+    tombstoned slots are NOT reused; inserts append at the chain tail.
+  * probing resolves the page chain (the RLU command stream) and hands the
+    page list to a backend (ref / area / perf / bitserial — see probe.py and
+    kernels/).
+
+Everything is a JAX pytree and jit/vmap/pjit-compatible; the structure is
+immutable — every mutation returns a new HashMem.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HashMemConfig
+from repro.core import layout
+from repro.core.hashing import EMPTY_KEY, TOMBSTONE_KEY, hash_to_bucket
+
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["key_pages", "val_pages", "planes", "bucket_head",
+                      "page_next", "page_fill", "free_top"],
+         meta_fields=["config"])
+@dataclass
+class HashMem:
+    key_pages: jax.Array          # (num_pages, slots) uint32
+    val_pages: jax.Array          # (num_pages, slots) uint32
+    planes: Optional[jax.Array]   # (num_pages, key_bits, slots//32) uint32 | None
+    bucket_head: jax.Array        # (num_buckets,) int32
+    page_next: jax.Array          # (num_pages,) int32, -1 terminal
+    page_fill: jax.Array          # (num_pages,) int32 (high-water mark incl. tombstones)
+    free_top: jax.Array           # () int32 pim_malloc bump pointer
+    config: HashMemConfig
+
+
+def _keep_planes(cfg: HashMemConfig) -> bool:
+    return cfg.backend == "bitserial"
+
+
+def create(cfg: HashMemConfig) -> HashMem:
+    """Empty HashMem: every bucket pre-owns its direct page (paper §2.4)."""
+    keys, vals = layout.empty_pool(cfg.num_pages, cfg.slots_per_page)
+    planes = layout.pack_bitplanes(keys, cfg.key_bits) if _keep_planes(cfg) else None
+    return HashMem(
+        key_pages=keys,
+        val_pages=vals,
+        planes=planes,
+        bucket_head=jnp.arange(cfg.num_buckets, dtype=I32),
+        page_next=jnp.full((cfg.num_pages,), -1, dtype=I32),
+        page_fill=jnp.zeros((cfg.num_pages,), dtype=I32),
+        free_top=jnp.asarray(cfg.num_buckets, dtype=I32),
+        config=cfg,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bulk build (vectorized; the paper populates the dataset before probing)
+# ---------------------------------------------------------------------------
+
+def build(cfg: HashMemConfig, keys: jax.Array, vals: jax.Array) -> HashMem:
+    """Vectorized bulk load of N key/value pairs.
+
+    Buckets receive ceil(count/slots) pages; overflow pages are allocated
+    contiguously from the arena in bucket order.  Duplicate keys are all
+    stored; probe returns the first match in chain order.
+    """
+    b = hash_to_bucket(keys.astype(U32), cfg.num_buckets, cfg.hash_fn, cfg.salt)
+    return build_with_buckets(cfg, keys, vals, b)
+
+
+def build_with_buckets(cfg: HashMemConfig, keys: jax.Array, vals: jax.Array,
+                       b: jax.Array) -> HashMem:
+    """Bulk load with caller-supplied bucket ids (used by the RLU channel
+    layer, which derives (owner shard, local bucket) from one global hash)."""
+    cfg_slots = cfg.slots_per_page
+    n = keys.shape[0]
+    keys = keys.astype(U32)
+    vals = vals.astype(U32)
+    order = jnp.argsort(b)
+    bs, ks, vs = b[order], keys[order], vals[order]
+
+    start = jnp.searchsorted(bs, bs, side="left")
+    rank = jnp.arange(n, dtype=I32) - start.astype(I32)                    # rank in bucket
+    depth = rank // cfg_slots
+    slot = rank % cfg_slots
+
+    counts = jnp.zeros((cfg.num_buckets,), I32).at[bs].add(1)
+    n_over = jnp.maximum((counts + cfg_slots - 1) // cfg_slots - 1, 0)     # overflow pages/bucket
+    over_off = jnp.cumsum(n_over) - n_over                                 # exclusive prefix
+
+    page = jnp.where(depth == 0, bs,
+                     cfg.num_buckets + over_off[bs] + depth - 1).astype(I32)
+
+    key_pages, val_pages = layout.empty_pool(cfg.num_pages, cfg_slots)
+    key_pages = key_pages.at[page, slot].set(ks)
+    val_pages = val_pages.at[page, slot].set(vs)
+    page_fill = jnp.zeros((cfg.num_pages,), I32).at[page].max(slot + 1)
+
+    # chain links: first element landing on a depth>=1 page links prev -> page
+    is_link = (depth >= 1) & (slot == 0)
+    prev_page = jnp.where(depth == 1, bs,
+                          cfg.num_buckets + over_off[bs] + depth - 2).astype(I32)
+    link_idx = jnp.where(is_link, prev_page, cfg.num_pages)                # OOB -> dropped
+    page_next = jnp.full((cfg.num_pages,), -1, I32).at[link_idx].set(page, mode="drop")
+
+    free_top = cfg.num_buckets + jnp.sum(n_over)
+    planes = layout.pack_bitplanes(key_pages, cfg.key_bits) if _keep_planes(cfg) else None
+
+    return HashMem(key_pages=key_pages, val_pages=val_pages, planes=planes,
+                   bucket_head=jnp.arange(cfg.num_buckets, dtype=I32),
+                   page_next=page_next, page_fill=page_fill,
+                   free_top=free_top.astype(I32), config=cfg)
+
+
+def build_check(cfg: HashMemConfig, keys) -> dict:
+    """Pre-flight (non-jit) checks that the arena/chain bounds suffice."""
+    import numpy as np
+    b = np.asarray(hash_to_bucket(jnp.asarray(keys, U32), cfg.num_buckets,
+                                  cfg.hash_fn, cfg.salt))
+    counts = np.bincount(b, minlength=cfg.num_buckets)
+    pages = np.maximum((counts + cfg.slots_per_page - 1) // cfg.slots_per_page, 0)
+    return {
+        "max_chain_needed": int(pages.max(initial=0)),
+        "overflow_pages_needed": int(np.maximum(pages - 1, 0).sum()),
+        "fits": bool(pages.max(initial=0) <= cfg.max_chain
+                     and np.maximum(pages - 1, 0).sum() <= cfg.overflow_pages),
+        "load_factor": float(counts.sum() / (cfg.num_pages * cfg.slots_per_page)),
+        "bucket_counts": counts,
+    }
+
+
+# ---------------------------------------------------------------------------
+# RLU command-stream resolution (paper §2.3: RLU locates subarray rows)
+# ---------------------------------------------------------------------------
+
+def resolve_pages(hm: HashMem, queries: jax.Array) -> jax.Array:
+    """queries (Q,) uint32 -> (Q, max_chain) int32 page ids, -1 padded.
+
+    This is the RLU step: translate each probe key into the ordered list of
+    subarray rows (pages) to activate.  Bounded by config.max_chain.
+    """
+    cfg = hm.config
+    b = hash_to_bucket(queries.astype(U32), cfg.num_buckets, cfg.hash_fn, cfg.salt)
+    return resolve_pages_by_bucket(hm, b)
+
+
+def resolve_pages_by_bucket(hm: HashMem, b: jax.Array) -> jax.Array:
+    cfg = hm.config
+    page = hm.bucket_head[b]                                              # (Q,)
+    cols = [page]
+    for _ in range(cfg.max_chain - 1):
+        nxt = jnp.where(page >= 0, hm.page_next[jnp.maximum(page, 0)], -1)
+        cols.append(nxt)
+        page = nxt
+    return jnp.stack(cols, axis=1).astype(I32)
+
+
+# ---------------------------------------------------------------------------
+# Probe / insert / delete
+# ---------------------------------------------------------------------------
+
+def probe(hm: HashMem, queries: jax.Array, backend: Optional[str] = None):
+    """Batched probe.  Returns (values (Q,) uint32, found (Q,) bool)."""
+    from repro.core.probe import probe_pages   # local import to avoid cycle
+    pages = resolve_pages(hm, queries)
+    return probe_pages(hm, queries.astype(U32), pages,
+                       backend=backend or hm.config.backend)
+
+
+def _write_key_bits(planes, page, slot, key, key_bits: int):
+    """Incremental bit-plane maintenance for a single (page, slot) write."""
+    word = slot // 32
+    bit = (slot % 32).astype(U32)
+    j = jnp.arange(key_bits, dtype=U32)
+    kbits = ((key.astype(U32) >> j) & U32(1))                              # (b,)
+    old = planes[page, :, word]                                           # (b,)
+    mask = ~(U32(1) << bit)
+    new = (old & mask) | (kbits << bit)
+    return planes.at[page, :, word].set(new)
+
+
+def insert(hm: HashMem, keys: jax.Array, vals: jax.Array):
+    """Batched insert (paper §3.1 Listing 1), sequential within the batch so
+    intra-batch bucket collisions resolve exactly like repeated single inserts.
+
+    Returns (new_hm, ok (B,) bool).  ok=False iff pim_malloc failed
+    (PR_ERROR: arena exhausted or chain bound exceeded).
+    """
+    cfg = hm.config
+    slots = cfg.slots_per_page
+
+    def step(state, kv):
+        key_pages, val_pages, planes, page_next, page_fill, free_top = state
+        k, v = kv
+        b = hash_to_bucket(k[None], cfg.num_buckets, cfg.hash_fn, cfg.salt)[0]
+        # walk to chain tail (bounded)
+        last = hm.bucket_head[b]
+        for _ in range(cfg.max_chain - 1):
+            nxt = page_next[jnp.maximum(last, 0)]
+            last = jnp.where(nxt >= 0, nxt, last)
+        fill = page_fill[last]
+        need_new = fill >= slots
+        new_page = free_top
+        ok = jnp.where(need_new, new_page < cfg.num_pages, True)
+        tp = jnp.where(need_new, new_page, last).astype(I32)
+        ts = jnp.where(need_new, 0, fill).astype(I32)
+        wp = jnp.where(ok, tp, cfg.num_pages)                              # OOB drop if !ok
+        key_pages = key_pages.at[wp, ts].set(k, mode="drop")
+        val_pages = val_pages.at[wp, ts].set(v, mode="drop")
+        if planes is not None:
+            planes = jnp.where(ok, _write_key_bits(planes, tp, ts, k, cfg.key_bits), planes)
+        page_fill = page_fill.at[wp].set(ts + 1, mode="drop")
+        do_link = need_new & ok
+        page_next = page_next.at[jnp.where(do_link, last, cfg.num_pages)].set(
+            new_page, mode="drop")
+        free_top = free_top + do_link.astype(I32)
+        return (key_pages, val_pages, planes, page_next, page_fill, free_top), ok
+
+    init = (hm.key_pages, hm.val_pages, hm.planes, hm.page_next, hm.page_fill,
+            hm.free_top)
+    (kp, vp, pl, pn, pf, ft), oks = jax.lax.scan(
+        step, init, (keys.astype(U32), vals.astype(U32)))
+    new = HashMem(key_pages=kp, val_pages=vp, planes=pl,
+                  bucket_head=hm.bucket_head, page_next=pn, page_fill=pf,
+                  free_top=ft, config=cfg)
+    return new, oks
+
+
+def delete(hm: HashMem, keys: jax.Array):
+    """Batched tombstone delete (paper §2.5).  Returns (new_hm, found)."""
+    cfg = hm.config
+    slots = cfg.slots_per_page
+    q = keys.astype(U32)
+    pages = resolve_pages(hm, q)                                           # (Q, C)
+    rows = hm.key_pages[jnp.maximum(pages, 0)]                             # (Q, C, S)
+    match = (rows == q[:, None, None]) & (pages >= 0)[:, :, None]
+    qn, C = pages.shape
+    flat = match.reshape(qn, C * slots)
+    found = jnp.any(flat, axis=1)
+    idx = jnp.argmax(flat, axis=1)
+    c, s = idx // slots, (idx % slots).astype(I32)
+    pg = pages[jnp.arange(qn), c]
+    wp = jnp.where(found, pg, cfg.num_pages)                               # OOB drop
+    key_pages = hm.key_pages.at[wp, s].set(TOMBSTONE_KEY, mode="drop")
+    planes = hm.planes
+    if planes is not None:
+        def one(pl, args):
+            f, p, sl = args
+            return jnp.where(
+                f, _write_key_bits(pl, p, sl, TOMBSTONE_KEY, cfg.key_bits), pl), None
+        planes, _ = jax.lax.scan(one, planes, (found, jnp.maximum(pg, 0), s))
+    new = HashMem(key_pages=key_pages, val_pages=hm.val_pages, planes=planes,
+                  bucket_head=hm.bucket_head, page_next=hm.page_next,
+                  page_fill=hm.page_fill, free_top=hm.free_top, config=cfg)
+    return new, found
+
+
+# ---------------------------------------------------------------------------
+# Introspection (fig. 4 reproduction + invariants for property tests)
+# ---------------------------------------------------------------------------
+
+def stats(hm: HashMem) -> dict:
+    import numpy as np
+    cfg = hm.config
+    kp = np.asarray(hm.key_pages)
+    fill = np.asarray(hm.page_fill)
+    nxt = np.asarray(hm.page_next)
+    live = (kp != np.uint32(0xFFFFFFFF)) & (kp != np.uint32(0xFFFFFFFE))
+    chain_len = np.zeros(cfg.num_buckets, np.int32)
+    head = np.asarray(hm.bucket_head)
+    for bkt in range(cfg.num_buckets):
+        p, n_ = head[bkt], 0
+        while p >= 0 and n_ <= cfg.max_chain:
+            n_ += 1
+            p = nxt[p]
+        chain_len[bkt] = n_
+    return {
+        "live_entries": int(live.sum()),
+        "tombstones": int((kp == np.uint32(0xFFFFFFFE)).sum()),
+        "pages_used": int(np.sum(fill > 0)),
+        "free_pages": int(cfg.num_pages - np.asarray(hm.free_top)),
+        "chain_lengths": chain_len,
+        "max_chain": int(chain_len.max(initial=0)),
+    }

@@ -1,0 +1,54 @@
+"""Bucket-per-row page layout + bit-plane packing (paper §2, §2.2).
+
+The HashMem pool mirrors the paper's DRAM organization:
+
+  * page  == one subarray row: ``slots`` columns of key/value pairs.
+    Opening a page (loading its row into VMEM) exposes the whole bucket
+    segment to the comparison units, exactly like a DRAM row activation.
+  * The performance-optimized version stores keys **column-oriented as bit
+    slices** (paper: "each row contains a single-bit slice from thousands of
+    values").  ``pack_bitplanes`` produces that layout: plane j, word w holds
+    bit j of keys at slots [32w, 32w+32).  A b-bit probe is then b bitwise
+    vector ops over int32 lane words — element-parallel, bit-serial.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.hashing import EMPTY_KEY
+
+U32 = jnp.uint32
+
+
+def empty_pool(num_pages: int, slots: int):
+    """Key/value page pools initialized to EMPTY."""
+    keys = jnp.full((num_pages, slots), EMPTY_KEY, dtype=U32)
+    vals = jnp.zeros((num_pages, slots), dtype=U32)
+    return keys, vals
+
+
+def pack_bitplanes(key_pages, key_bits: int):
+    """(P, S) uint32 keys -> (P, key_bits, S//32) uint32 bit-planes.
+
+    Word layout: plane[p, j, w] bit i (LSB-first) = bit j of key_pages[p, 32w+i].
+    """
+    P, S = key_pages.shape
+    assert S % 32 == 0, "slots must be a multiple of 32 for bit-plane packing"
+    # (P, S, key_bits) bit j of each key
+    j = jnp.arange(key_bits, dtype=U32)
+    bits = (key_pages[:, :, None] >> j[None, None, :]) & U32(1)  # (P, S, b)
+    bits = bits.transpose(0, 2, 1).reshape(P, key_bits, S // 32, 32)
+    weights = (U32(1) << jnp.arange(32, dtype=U32))
+    planes = jnp.sum(bits * weights[None, None, None, :], axis=-1, dtype=U32)
+    return planes
+
+
+def unpack_bitplanes(planes, key_bits: int):
+    """Inverse of pack_bitplanes (for tests): (P, b, W) -> (P, 32W) uint32."""
+    P, b, W = planes.shape
+    assert b == key_bits
+    i = jnp.arange(32, dtype=U32)
+    bits = (planes[:, :, :, None] >> i[None, None, None, :]) & U32(1)  # (P,b,W,32)
+    bits = bits.reshape(P, b, W * 32).transpose(0, 2, 1)               # (P,S,b)
+    j = jnp.arange(key_bits, dtype=U32)
+    return jnp.sum(bits * (U32(1) << j)[None, None, :], axis=-1, dtype=U32)

@@ -1,0 +1,274 @@
+"""Paged KV cache managed by a HashMem page table (DESIGN.md §3.1).
+
+This is the paper's virtualization layer (§2.4-2.5) applied to serving:
+
+  * a KV "page" holds ``page_tokens`` tokens of one sequence — the
+    bucket-per-page mapping (logical bucket = (seq, block index)).
+  * the page table is a real ``repro.core.hashmap.HashMem``: key =
+    seq_id * MAX_BLOCKS + block, value = physical page id.  Allocation is
+    ``pim_malloc`` from per-channel free lists; freeing a sequence writes
+    tombstones (paper deletion semantics) and recycles the physical pages.
+  * physical pages are spread across the mesh — the paper's §2.5
+    optimization of spreading overflow pages "across different channels ...
+    to enable the parallel probing of pages".  Decode attention is split-KV
+    across channels with a log-sum-exp combine (flash-decoding semantics
+    falling out of the paper's channel parallelism).
+
+Pool layout (grouped): the flat page-pool dim is sharded jointly over ALL
+mesh axes.  Device (batch-group g, channel m) owns physical pages
+[flat*pps, (flat+1)*pps), flat = g*Dm + m.  Sequence b belongs to batch
+group g(b) (its batch shard); logical page j of b lives on channel j mod Dm.
+With no batch sharding (long-context B=1) every axis is a channel.
+
+Inside jit, the resolved block table (the RLU command stream) is a dense
+(B, n_pages) int32 array; the HashMem manager lives at the serving layer.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Pools
+# ---------------------------------------------------------------------------
+
+def init_pool(num_pages: int, page_tokens: int, kv_heads: int, head_dim: int,
+              dtype=jnp.bfloat16):
+    shape = (num_pages, page_tokens, kv_heads, head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def _flat_index(axes: Sequence[str]) -> jax.Array:
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _axes_size(axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= jax.lax.axis_size(a)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Local (single-device) paths
+# ---------------------------------------------------------------------------
+
+def append(k_pool, v_pool, block_table, pos, k_new, v_new):
+    """Write one new token per sequence into its tail page (local pool)."""
+    pt = k_pool.shape[1]
+    j = pos // pt
+    off = pos % pt
+    page = jnp.take_along_axis(block_table, j[:, None], axis=1)[:, 0]
+    k_pool = k_pool.at[page, off].set(k_new[:, 0])
+    v_pool = v_pool.at[page, off].set(v_new[:, 0])
+    return k_pool, v_pool
+
+
+def _partial_decode(q, k, v, positions, pos, window):
+    """Partial (per-channel) attention.  q (B,K,G,hd); k/v (B,T,K,hd);
+    positions (B,T) absolute token positions (-1 = invalid).
+    Returns (m, l, acc) for LSE combine."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    valid = (positions >= 0) & (positions <= pos[:, None])
+    if window:
+        valid &= positions > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(valid[:, None, None], jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return m, l, acc
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, pos, cfg):
+    """Single-device decode attention (gather path)."""
+    B, _, H, hd = q.shape
+    K = k_pool.shape[2]
+    G = H // K
+    pt = k_pool.shape[1]
+    qg = q.reshape(B, K, G, hd)
+    n_pages = block_table.shape[1]
+    k = k_pool[block_table].reshape(B, n_pages * pt, K, hd)
+    v = v_pool[block_table].reshape(B, n_pages * pt, K, hd)
+    positions = jnp.broadcast_to(jnp.arange(n_pages * pt), (B, n_pages * pt))
+    m, l, acc = _partial_decode(qg, k, v, positions, pos, cfg.sliding_window)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Channel-parallel (inside shard_map over the WHOLE mesh)
+# ---------------------------------------------------------------------------
+
+def decode_attention_sharded(q, k_pool, v_pool, block_table, pos, cfg,
+                             batch_axes: Sequence[str],
+                             channel_axes: Sequence[str],
+                             pages_per_shard: int):
+    """q (B_loc,1,H,hd) local batch; pools are the LOCAL page slice;
+    block_table (B_loc, n_pages) holds GLOBAL physical page ids."""
+    B, _, H, hd = q.shape
+    K = k_pool.shape[2]
+    G = H // K
+    pt = k_pool.shape[1]
+    qg = q.reshape(B, K, G, hd)
+    n_pages = block_table.shape[1]
+
+    Dm = _axes_size(channel_axes)
+    me_m = _flat_index(channel_axes)
+    me_flat = _flat_index(tuple(batch_axes) + tuple(channel_axes))
+    nl = max(n_pages // Dm, 1)
+
+    # logical pages j ≡ me_m (mod Dm)
+    bt_r = block_table[:, :nl * Dm].reshape(B, nl, Dm)
+    local_bt = jnp.take_along_axis(
+        bt_r, jnp.full((B, nl, 1), me_m, jnp.int32), axis=2)[..., 0]
+    mine = (local_bt // pages_per_shard) == me_flat        # allocator guarantee
+    slot = jnp.where(mine, local_bt % pages_per_shard, 0)
+    k = k_pool[slot].reshape(B, nl * pt, K, hd)
+    v = v_pool[slot].reshape(B, nl * pt, K, hd)
+    j_log = jnp.arange(nl) * Dm + me_m
+    positions = (j_log[:, None] * pt + jnp.arange(pt)[None, :])  # (nl, pt)
+    positions = jnp.where(mine[:, :, None], positions[None], -1) \
+        .reshape(B, nl * pt)
+    m, l, acc = _partial_decode(qg, k, v, positions, pos, cfg.sliding_window)
+    # LSE combine across channels only (batch axes hold distinct sequences)
+    if channel_axes:
+        M = m
+        for a in channel_axes:
+            M = jax.lax.pmax(M, a)
+        r = jnp.exp(m - M)
+        num = jax.lax.psum(acc * r[..., None], tuple(channel_axes))
+        den = jax.lax.psum(l * r, tuple(channel_axes))
+    else:
+        num, den = acc, l
+    out = num / jnp.maximum(den, 1e-30)[..., None]
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def append_sharded(k_pool, v_pool, block_table, pos, k_new, v_new,
+                   batch_axes: Sequence[str], channel_axes: Sequence[str],
+                   pages_per_shard: int):
+    """Owner-channel append.  All args local-batch views."""
+    pt = k_pool.shape[1]
+    me_flat = _flat_index(tuple(batch_axes) + tuple(channel_axes))
+    j = pos // pt
+    off = pos % pt
+    page = jnp.take_along_axis(block_table, j[:, None], axis=1)[:, 0]
+    mine = (page // pages_per_shard) == me_flat
+    slot = jnp.where(mine, page % pages_per_shard, k_pool.shape[0])
+    k_pool = k_pool.at[slot, off].set(k_new[:, 0], mode="drop")
+    v_pool = v_pool.at[slot, off].set(v_new[:, 0], mode="drop")
+    return k_pool, v_pool
+
+
+def prefill_pages(k_pool, v_pool, block_table, k, v):
+    """Scatter prefill KV (B,S,K,hd) into pages (local pool).  S must be a
+    multiple of page_tokens; block_table (B, >=S/pt)."""
+    B, S, K, hd = k.shape
+    pt = k_pool.shape[1]
+    n = S // pt
+    kp = k.reshape(B, n, pt, K, hd)
+    vp = v.reshape(B, n, pt, K, hd)
+    bt = block_table[:, :n]
+    k_pool = k_pool.at[bt].set(kp)
+    v_pool = v_pool.at[bt].set(vp)
+    return k_pool, v_pool
+
+
+# ---------------------------------------------------------------------------
+# Serving layer: the HashMem page-table manager (outside jit)
+# ---------------------------------------------------------------------------
+
+class PageTableManager:
+    """Page-table = HashMem; pim_malloc = per-owner free-list arenas.
+
+    Keys are seq_id * max_blocks + block_idx (uint32); values are physical
+    page ids.  ``block_table`` resolves the dense in-jit table by PROBING
+    the hashmap (through any backend, including the Pallas kernels).
+
+    ``num_channels`` arenas follow the grouped layout: arena c owns physical
+    ids [c*pps, (c+1)*pps).  ``alloc_seq(..., group=g)`` places logical page
+    j in arena g*Dm + (j % Dm) — batch group g, channel j mod Dm.
+    """
+
+    MAX_BLOCKS = 1 << 12
+
+    def __init__(self, total_pages: int, num_channels: int = 1,
+                 num_groups: int = 1, hashmem_cfg=None, backend: str = "ref"):
+        from repro.configs.base import HashMemConfig
+        from repro.core import hashmap
+
+        arenas = num_channels * num_groups
+        assert total_pages % arenas == 0
+        self.Dm = num_channels
+        self.groups = num_groups
+        self.pps = total_pages // arenas
+        self.total_pages = total_pages
+        cfg = hashmem_cfg or HashMemConfig(
+            num_buckets=max(64, total_pages // 4), slots_per_page=128,
+            overflow_pages=max(64, total_pages // 8), max_chain=8,
+            backend=backend)
+        self.cfg = cfg
+        self.hm = hashmap.create(cfg)
+        self.free = [list(range(c * self.pps, (c + 1) * self.pps))[::-1]
+                     for c in range(arenas)]
+        self.owned: dict[int, list[int]] = {}
+
+    def _key(self, seq_id: int, block: int) -> int:
+        assert block < self.MAX_BLOCKS
+        return seq_id * self.MAX_BLOCKS + block
+
+    def alloc_seq(self, seq_id: int, n_blocks: int, group: int = 0) -> np.ndarray:
+        from repro.core import hashmap
+        phys, keys = [], []
+        for j in range(n_blocks):
+            arena = self.free[group * self.Dm + j % self.Dm]
+            if not arena:
+                raise MemoryError("pim_malloc: PR_ERROR (arena exhausted)")
+            p = arena.pop()
+            phys.append(p)
+            keys.append(self._key(seq_id, j))
+        self.hm, ok = hashmap.insert(
+            self.hm, jnp.asarray(keys, jnp.uint32), jnp.asarray(phys, jnp.uint32))
+        if not bool(jnp.all(ok)):
+            raise MemoryError("page-table insert failed (PR_ERROR)")
+        self.owned.setdefault(seq_id, []).extend(phys)
+        return np.asarray(phys, np.int32)
+
+    def block_table(self, seq_ids, n_blocks: int) -> np.ndarray:
+        """Resolve (B, n_blocks) dense table by probing the HashMem."""
+        from repro.core import hashmap
+        B = len(seq_ids)
+        keys = np.asarray([[self._key(s, j) for j in range(n_blocks)]
+                           for s in seq_ids], np.uint32).reshape(-1)
+        vals, found = hashmap.probe(self.hm, jnp.asarray(keys))
+        vals = np.asarray(vals).astype(np.int32)
+        found = np.asarray(found)
+        vals[~found] = 0  # unallocated blocks -> page 0 (masked by pos in-attn)
+        return vals.reshape(B, n_blocks)
+
+    def free_seq(self, seq_id: int):
+        """Tombstone the table entries (paper §2.5) and recycle pages."""
+        from repro.core import hashmap
+        pages = self.owned.pop(seq_id, [])
+        if not pages:
+            return
+        keys = [self._key(seq_id, j) for j in range(len(pages))]
+        self.hm, _ = hashmap.delete(self.hm, jnp.asarray(keys, jnp.uint32))
+        for p in pages:
+            self.free[p // self.pps].append(p)
+
+    def live_pages(self) -> int:
+        return sum(len(v) for v in self.owned.values())

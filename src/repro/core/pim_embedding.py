@@ -1,0 +1,68 @@
+"""Hash/dictionary-encoded embedding lookups through HashMem (DESIGN.md §3.3).
+
+Two production patterns from the paper's §4.1.1 contract ("string values ...
+dictionary-encoded into numerical values to be used in HashMem"):
+
+  * ``DictionaryVocab``: a HashMem mapping raw feature keys (dictionary-
+    encoded uint32) -> dense row ids; ``encode`` probes (through any backend,
+    incl. the Pallas kernels) and ``lookup`` gathers embedding rows.  Unknown
+    keys map to a learned OOV row — the not-found flag from the probe IS the
+    OOV signal.
+  * ``qr_embedding``: the quotient-remainder trick (Shi et al. 2019) for
+    huge vocabularies: row = E_q[h // Q] + E_r[h % Q]; the hash is the
+    paper's hash family (murmur3 finisher).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HashMemConfig
+from repro.core import hashmap
+from repro.core.hashing import HASH_FNS
+
+
+class DictionaryVocab:
+    """key -> row-id dictionary backed by a HashMem (probe = paper §2.5)."""
+
+    def __init__(self, keys: np.ndarray, cfg: HashMemConfig | None = None):
+        n = len(keys)
+        self.cfg = cfg or HashMemConfig(
+            num_buckets=max(64, 1 << int(np.ceil(np.log2(max(n, 1) / 256 + 1)))),
+            slots_per_page=512,
+            overflow_pages=max(64, n // 256),
+            max_chain=8, backend="ref")
+        rows = jnp.arange(n, dtype=jnp.uint32)
+        self.hm = hashmap.build(self.cfg, jnp.asarray(keys, jnp.uint32), rows)
+        self.size = n
+
+    def encode(self, raw_keys, backend=None):
+        """raw (..,) uint32 -> (row_ids (..,) int32, found (..,) bool);
+        not-found -> row self.size (the OOV row)."""
+        shape = raw_keys.shape
+        rows, found = hashmap.probe(self.hm, raw_keys.reshape(-1),
+                                    backend=backend)
+        rows = jnp.where(found, rows, jnp.uint32(self.size)).astype(jnp.int32)
+        return rows.reshape(shape), found.reshape(shape)
+
+    def lookup(self, table, raw_keys, backend=None):
+        """table ((size+1), d) with OOV row last -> embeddings (.., d)."""
+        rows, _ = self.encode(raw_keys, backend=backend)
+        return table[rows]
+
+
+def qr_embedding(params, ids, num_rows: int, hash_fn: str = "murmur3_fmix"):
+    """Quotient-remainder hash embedding.  params: {'q': (R_q, d),
+    'r': (R_r, d)} with R_q = ceil(num_rows / R_r)."""
+    h = HASH_FNS[hash_fn](ids.astype(jnp.uint32)) % jnp.uint32(num_rows)
+    r_r = params["r"].shape[0]
+    return params["q"][(h // r_r).astype(jnp.int32)] + \
+        params["r"][(h % r_r).astype(jnp.int32)]
+
+
+def init_qr(key, num_rows: int, d: int, r_r: int = 4096):
+    kq, kr = jax.random.split(key)
+    r_q = (num_rows + r_r - 1) // r_r
+    return {"q": jax.random.normal(kq, (r_q, d)) * 0.02,
+            "r": jax.random.normal(kr, (r_r, d)) * 0.02}

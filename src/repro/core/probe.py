@@ -1,0 +1,23 @@
+"""Backend dispatch for HashMem probes (ref / area / perf / bitserial)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+def probe_pages(hm, queries, pages, backend: str):
+    """Dispatch a resolved probe (RLU command stream) to a compare backend."""
+    if backend == "ref":
+        return kref.probe_pages_ref(hm.key_pages, hm.val_pages, queries, pages)
+    if backend == "perf":
+        return ops.probe_perf(hm.key_pages, hm.val_pages, queries, pages)
+    if backend == "area":
+        return ops.probe_area(hm.key_pages, hm.val_pages, queries, pages)
+    if backend == "bitserial":
+        if hm.planes is None:
+            raise ValueError("bitserial backend requires planes (backend='bitserial' at build)")
+        return ops.probe_bitserial(hm.planes, hm.val_pages, queries, pages,
+                                   key_bits=hm.config.key_bits)
+    raise ValueError(f"unknown probe backend {backend!r}")

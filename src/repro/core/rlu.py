@@ -1,0 +1,126 @@
+"""RLU: orchestration between probe requests and HashMem shards.
+
+Single-device: the RLU resolves each probe key to its page chain (the
+"command stream", hashmap.resolve_pages) and issues it to a compare backend.
+
+Multi-device ("channel-level parallelism", paper §6 — future work there,
+IMPLEMENTED here): buckets are partitioned across the mesh 'model' axis the
+way the paper spreads pages "across different channels and ranks ... to
+enable the parallel probing of pages".  One global hash h(key) defines
+
+    owner shard  = h mod D
+    local bucket = (h div D) mod num_buckets_local
+
+Probes are routed to owners with ``all_to_all``, probed locally with the
+configured kernel backend, and routed back — the TPU ICI plays the role of
+the paper's memory-channel fan-out.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import HashMemConfig
+from repro.core import hashmap
+from repro.core.hashing import EMPTY_KEY, HASH_FNS
+from repro.core.probe import probe_pages
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+
+def owner_and_local_bucket(keys, cfg: HashMemConfig, num_shards: int):
+    h = HASH_FNS[cfg.hash_fn](keys.astype(U32), cfg.salt)
+    owner = (h % U32(num_shards)).astype(I32)
+    local = ((h // U32(num_shards)) % U32(cfg.num_buckets)).astype(I32)
+    return owner, local
+
+
+def build_sharded(cfg: HashMemConfig, keys, vals, num_shards: int):
+    """Build per-shard HashMems; returns a stacked pytree with leading axis
+    num_shards (shard i's arrays at index i), ready to shard over 'model'.
+
+    cfg.num_buckets is the PER-SHARD bucket count.
+    """
+    owner, local = owner_and_local_bucket(keys, cfg, num_shards)
+    shards = []
+    for d in range(num_shards):
+        m = owner == d
+        # density: route shard-d keys to front; pad with EMPTY (never probed)
+        idx = jnp.argsort(~m)  # shard-d keys first
+        k = jnp.where(m[idx], keys[idx].astype(U32), EMPTY_KEY)
+        v = jnp.where(m[idx], vals[idx].astype(U32), U32(0))
+        b = jnp.where(m[idx], local[idx], 0)
+        # EMPTY keys land in bucket 0 but as EMPTY they never match a probe;
+        # they do consume slots, so size the scaled config accordingly.
+        shards.append(hashmap.build_with_buckets(cfg, k, v, b))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+
+
+def _local_probe(hm_local, queries, cfg: HashMemConfig, num_shards: int):
+    _, local_bucket = owner_and_local_bucket(queries, cfg, num_shards)
+    pages = hashmap.resolve_pages_by_bucket(hm_local, local_bucket)
+    return probe_pages(hm_local, queries.astype(U32), pages, backend=cfg.backend)
+
+
+def probe_sharded(mesh, hm_stacked, queries, cfg: HashMemConfig,
+                  axis: str = "model", cap: Optional[int] = None):
+    """Channel-parallel probe: queries (Q,) sharded over `axis`.
+
+    cap = per-(src,dst) routing capacity; None -> Q_local (always sufficient).
+    Returns (values (Q,), found (Q,)) with the same sharding as queries.
+    """
+    num_shards = mesh.shape[axis]
+
+    def shard_fn(hm_stacked_local, q_local):
+        hm_local = jax.tree.map(lambda x: x[0], hm_stacked_local)
+        qn = q_local.shape[0]
+        c = cap or qn
+        owner, _ = owner_and_local_bucket(q_local, cfg, num_shards)
+        order = jnp.argsort(owner)
+        q_sorted = q_local[order].astype(U32)
+        o_sorted = owner[order]
+        # position within each owner group
+        start = jnp.searchsorted(o_sorted, o_sorted, side="left")
+        pos = jnp.arange(qn, dtype=I32) - start.astype(I32)
+        overflow = pos >= c
+        send = jnp.full((num_shards, c), EMPTY_KEY, dtype=U32)
+        send = send.at[o_sorted, jnp.minimum(pos, c - 1)].set(
+            jnp.where(overflow, EMPTY_KEY, q_sorted))
+        # route to owners: recv[s] = what shard s sent to me
+        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0, tiled=False)
+        rv, rf = _local_probe(hm_local, recv.reshape(-1), cfg, num_shards)
+        # route results back
+        back_v = jax.lax.all_to_all(rv.reshape(num_shards, c), axis, 0, 0, tiled=False)
+        back_f = jax.lax.all_to_all(rf.reshape(num_shards, c), axis, 0, 0, tiled=False)
+        v_sorted = back_v[o_sorted, jnp.minimum(pos, c - 1)]
+        f_sorted = back_f[o_sorted, jnp.minimum(pos, c - 1)] & ~overflow
+        inv = jnp.argsort(order)
+        return v_sorted[inv], f_sorted[inv]
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)),
+        check_vma=False,
+    )
+    return fn(hm_stacked, queries)
+
+
+def probe_replicated(mesh, hm, queries, cfg: HashMemConfig, axis: str = "data"):
+    """Throughput mode: HashMem replicated, queries sharded over `axis`
+    (pure DP — the paper's multi-rank replication counterpoint)."""
+    def shard_fn(hm_local, q_local):
+        return hashmap.probe(hm_local, q_local, backend=cfg.backend)
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(axis)),
+        out_specs=(P(axis), P(axis)),
+        check_vma=False,
+    )
+    return fn(hm, queries)

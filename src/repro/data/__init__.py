@@ -1,0 +1,2 @@
+from repro.data.pipeline import SyntheticLMData, make_batch_specs
+from repro.data.kv_synth import kv_dataset, dictionary_words

@@ -1,0 +1,62 @@
+"""Key/value workload generators for the HashMem microbenchmark (paper §4.1.1)
+and the dictionary-word bucket-distribution study (paper Fig. 4)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def kv_dataset(num_pairs: int, seed: int = 0):
+    """Unique uint32 keys + values (paper: 100M pairs, 4B key + 4B value)."""
+    rng = np.random.default_rng(seed)
+    # unique keys below the sentinel range
+    keys = rng.choice(np.uint32(0xFFFFFFF0), size=num_pairs, replace=False) \
+        if num_pairs <= 2**26 else _unique_keys_large(rng, num_pairs)
+    vals = rng.integers(0, 2**32 - 1, size=num_pairs, dtype=np.uint64) \
+        .astype(np.uint32)
+    return keys.astype(np.uint32), vals
+
+
+def _unique_keys_large(rng, n):
+    # sampling without replacement at 100M scale: random 64-bit, hash to 32,
+    # dedupe, top-up
+    keys = np.unique((rng.integers(0, 0xFFFFFFF0, size=int(n * 1.2),
+                                   dtype=np.uint64)).astype(np.uint32))
+    while keys.size < n:
+        extra = (rng.integers(0, 0xFFFFFFF0, size=n, dtype=np.uint64)
+                 ).astype(np.uint32)
+        keys = np.unique(np.concatenate([keys, extra]))
+    rng.shuffle(keys)
+    return keys[:n]
+
+
+def probe_set(keys: np.ndarray, fraction: float, seed: int = 1):
+    """Paper: 10% of keys probed, selected at random."""
+    rng = np.random.default_rng(seed)
+    n = int(len(keys) * fraction)
+    idx = rng.choice(len(keys), size=n, replace=False)
+    return keys[idx], idx
+
+
+def dictionary_words(n: int = 350_000, seed: int = 3) -> np.ndarray:
+    """Synthetic 'dictionary': Zipf-weighted letter n-grams dictionary-encoded
+    to uint32 (paper Fig. 4 maps the first 350k words of a dictionary).
+    Word keys are the dictionary-encoded numeric ids the paper prescribes for
+    string data (§4.1.1)."""
+    rng = np.random.default_rng(seed)
+    # mimic word-length distribution 3..14, characters Zipf over 26 letters
+    lengths = rng.integers(3, 15, size=n)
+    p = 1.0 / np.arange(1, 27) ** 1.07
+    p /= p.sum()
+    out = np.zeros(n, np.uint32)
+    seen = set()
+    for i in range(n):
+        while True:
+            chars = rng.choice(26, size=lengths[i], p=p)
+            h = 2166136261
+            for c in chars:
+                h = ((h ^ (int(c) + 97)) * 16777619) & 0xFFFFFFFF
+            if h not in seen and h < 0xFFFFFFF0:
+                seen.add(h)
+                out[i] = h
+                break
+    return out

@@ -1,0 +1,141 @@
+"""pjit step factories: train_step and serve_step with full sharding specs.
+
+``build_train_step``/``build_serve_step`` return (jitted_fn, shardings) so
+both the real drivers (launch/train.py, launch/serve.py) and the dry-run
+(launch/dryrun.py — .lower().compile() on ShapeDtypeStructs) use the exact
+same compiled artifact.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import model
+from repro.models.layers import Axes
+from repro.optim import adamw_update, init_opt_state
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg, oc, mesh, *, seq_shard: bool = True,
+                     grad_compression: str = "none"):
+    pspec = shd.param_specs(cfg, mesh)
+    pshard = shd.named(mesh, pspec)
+    oshard = {"m": pshard, "v": pshard,
+              "step": NamedSharding(mesh, P())}
+    ctx = shd.ShardCtx(mesh, seq_shard=seq_shard)
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return model.loss_fn(p, cfg, batch, shard_ctx=ctx)
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        if grad_compression != "none":
+            from repro.distributed.compression import compress_tree
+            grads = compress_tree(grads, grad_compression)
+        new_params, new_opt, stats = adamw_update(params, grads, opt_state, oc)
+        return new_params, new_opt, {"loss": loss, **metrics, **stats}
+
+    def batch_shardings(batch_tree):
+        return {k: NamedSharding(mesh, P(shd.batch_spec(mesh, v.shape[0]),
+                                         *([None] * (v.ndim - 1))))
+                for k, v in batch_tree.items()}
+
+    def jitted(batch_tree):
+        return jax.jit(
+            train_step,
+            in_shardings=(pshard, oshard, batch_shardings(batch_tree)),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+        )
+
+    return train_step, jitted, pshard, oshard
+
+
+def init_train_state(cfg, oc, mesh, key):
+    """Sharded param/opt-state init (jit'd so arrays materialize sharded)."""
+    pspec = shd.param_specs(cfg, mesh)
+    pshard = shd.named(mesh, pspec)
+    oshard = {"m": pshard, "v": pshard, "step": NamedSharding(mesh, P())}
+
+    @partial(jax.jit, out_shardings=(pshard, oshard))
+    def init(key):
+        params = model.init_params(cfg, key)
+        return params, init_opt_state(params, oc)
+
+    return init(key)
+
+
+# ---------------------------------------------------------------------------
+# Serve (decode)
+# ---------------------------------------------------------------------------
+
+_STATE_AXES = {
+    # name, ndim (without the stacked layer dim) -> logical axes
+    ("k_pool", 4): ("kv_pages", "seq", "kv_heads", "head_dim"),
+    ("v_pool", 4): ("kv_pages", "seq", "kv_heads", "head_dim"),
+    ("conv", 3): ("batch", "conv", "mlp"),
+    ("ssm", 3): ("batch", "mlp", "state"),
+    ("C", 4): ("batch", "heads", "head_dim", "head_dim"),
+    ("n", 3): ("batch", "heads", "head_dim"),
+    ("m", 2): ("batch", "heads"),
+    ("c", 3): ("batch", "heads", "head_dim"),
+    ("n", 3): ("batch", "heads", "head_dim"),
+    ("h", 3): ("batch", "heads", "head_dim"),
+    ("m", 3): ("batch", "heads", "head_dim"),
+    ("ek", 4): ("batch", "seq", "kv_heads", "head_dim"),
+    ("ev", 4): ("batch", "seq", "kv_heads", "head_dim"),
+}
+
+
+def decode_state_specs(states, mesh):
+    def spec(path, x):
+        name = None
+        for p_ in reversed(path):
+            if hasattr(p_, "key"):
+                name = p_.key
+                break
+        axes = _STATE_AXES.get((name, x.ndim - 1))
+        if axes is None:
+            return P()
+        return shd.spec_for(mesh, Axes(("layers",) + axes), x.shape)
+
+    flat, td = jax.tree_util.tree_flatten_with_path(states)
+    return jax.tree_util.tree_unflatten(td, [spec(p_, x) for p_, x in flat])
+
+
+def build_serve_step(cfg, serve_cfg, mesh, *, channel_axis: Optional[str] = "model"):
+    del channel_axis  # topology derived from mesh (grouped layout)
+    B = serve_cfg.shape.global_batch
+    ctx = model.make_decode_ctx(cfg, serve_cfg, B, mesh=mesh)
+    pspec = shd.param_specs(cfg, mesh)
+    pshard = shd.named(mesh, pspec)
+    bsp = shd.batch_spec(mesh, B)
+
+    def serve_step(params, states, tokens, pos, block_table):
+        logits, new_states = model.decode_step(
+            params, cfg, states, tokens, pos, block_table, ctx)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_states
+
+    def jitted(state_tree):
+        sspec = decode_state_specs(state_tree, mesh)
+        sshard = shd.named(mesh, sspec)
+        return jax.jit(
+            serve_step,
+            in_shardings=(pshard, sshard,
+                          NamedSharding(mesh, P(bsp, None)),
+                          NamedSharding(mesh, P(bsp)),
+                          NamedSharding(mesh, P(bsp, None))),
+            out_shardings=(NamedSharding(mesh, P(bsp)), None, sshard),
+            donate_argnums=(1,),
+        )
+
+    return serve_step, jitted, ctx, pshard

@@ -1,0 +1,25 @@
+"""jit'd wrappers for the HashMem probe kernels.
+
+``interpret`` defaults to True off-TPU (this container validates the kernel
+bodies in interpret mode; on a real v5e the same calls lower to Mosaic).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.probe_area import probe_pages_area
+from repro.kernels.probe_bitserial import probe_pages_bitserial
+from repro.kernels.probe_perf import probe_pages_perf
+from repro.kernels import ref
+
+__all__ = [
+    "probe_perf", "probe_area", "probe_bitserial", "probe_ref",
+]
+
+probe_perf = jax.jit(partial(probe_pages_perf))
+probe_area = jax.jit(partial(probe_pages_area))
+probe_bitserial = jax.jit(partial(probe_pages_bitserial), static_argnames=("key_bits",))
+probe_ref = jax.jit(ref.probe_pages_ref)
+probe_bitplanes_ref = jax.jit(ref.probe_bitplanes_ref, static_argnames=("key_bits",))

@@ -1,0 +1,92 @@
+"""Area-optimized HashMem probe kernel (paper §2.1).
+
+Paper mechanism: ONE comparison unit per subarray walks the activated row
+buffer *element-serial, bit-parallel* — one key/value pair per step, matched
+keys latched into the output register.
+
+TPU adaptation (DESIGN.md §2): a TPU has no efficient scalar element walk
+over VMEM; the closest faithful analogue is *strip-serial*: a fori_loop
+steps through the row one (1,128)-lane strip at a time, performing a single
+compare per step and latching the first match — serial at strip granularity
+(the "one comparator" is one VPU issue slot per step), versus probe_perf
+which consumes the whole row at once.  This preserves the paper's
+area/perf contrast: same I/O, serialized compare schedule.
+
+Same grid/O contract as probe_perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+U32 = jnp.uint32
+LINE = 128
+STRIP = 128
+
+
+def _kernel(pages_ref, queries_ref, keys_ref, vals_ref, out_ref):
+    c = pl.program_id(1)
+    q = pl.program_id(0)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    page = pages_ref[q, c]
+    query = queries_ref[q]
+    valid = page >= 0
+    S = keys_ref.shape[1]
+    n_strips = S // STRIP
+
+    def body(i, carry):
+        found, val, slot = carry
+        krow = keys_ref[0, pl.dslice(i * STRIP, STRIP)]     # (STRIP,) uint32
+        vrow = vals_ref[0, pl.dslice(i * STRIP, STRIP)]
+        match = (krow == query) & valid
+        any_m = jnp.any(match)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (STRIP,), 0)
+        s_local = jnp.min(jnp.where(match, iota, jnp.int32(2**30)))
+        v_local = jnp.max(jnp.where((iota == s_local) & match, vrow, U32(0)))
+        take = any_m & jnp.logical_not(found)               # element-serial latch
+        return (found | any_m,
+                jnp.where(take, v_local, val),
+                jnp.where(take, i * STRIP + s_local, slot))
+
+    found, val, slot = jax.lax.fori_loop(
+        0, n_strips, body, (jnp.bool_(False), U32(0), jnp.int32(0)))
+
+    already = out_ref[0, 1] > U32(0)
+
+    @pl.when(found & jnp.logical_not(already))
+    def _write():
+        out_ref[0, 0] = val
+        out_ref[0, 1] = U32(1)
+        out_ref[0, 2] = page.astype(U32)
+        out_ref[0, 3] = slot.astype(U32)
+
+
+def probe_pages_area(key_pages, val_pages, queries, pages, *, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qn, C = pages.shape
+    P, S = key_pages.shape
+    assert S % STRIP == 0, "slots must be a multiple of 128"
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(qn, C),
+        in_specs=[
+            pl.BlockSpec((1, S), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0)),
+            pl.BlockSpec((1, S), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, LINE), lambda q, c, pages, queries: (q, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((qn, LINE), U32),
+        interpret=interpret,
+    )(pages.astype(jnp.int32), queries.astype(U32), key_pages, val_pages)
+    return out[:, 0], out[:, 1] > 0

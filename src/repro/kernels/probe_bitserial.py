@@ -1,0 +1,102 @@
+"""Bit-serial element-parallel HashMem probe kernel — the faithful §2.2 form.
+
+Paper mechanism (performance-optimized version): keys are stored
+column-oriented so "each row contains a single-bit slice from thousands of
+values"; comparison proceeds one bit-plane per step — b steps for b-bit keys
+— with ALL keys compared in parallel at every step.
+
+TPU adaptation (DESIGN.md §2): bit-planes are packed 32-slots-per-uint32-word
+(layout.pack_bitplanes); the per-bit step is a single vector XOR+OR over the
+word lanes, so one grid step performs `key_bits` vector ops regardless of the
+number of slots — exactly the paper's b-cycle CAM scan.  On TPU this wins
+over probe_perf only for sub-32-bit keys (b = 4/8/16, the paper's column
+widths); at b=32 the bit-parallel compare of probe_perf is strictly better.
+The benchmark harness quantifies that crossover (EXPERIMENTS.md §Perf).
+
+I/O: planes (P, b, W=S//32) u32 bit-planes, val_pages (P, S) u32,
+queries (Q,) u32, pages (Q, C) i32.  Output cache line as probe_perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+U32 = jnp.uint32
+LINE = 128
+
+
+def _make_kernel(key_bits: int):
+    def _kernel(pages_ref, queries_ref, planes_ref, vals_ref, out_ref):
+        c = pl.program_id(1)
+        q = pl.program_id(0)
+
+        @pl.when(c == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        page = pages_ref[q, c]
+        query = queries_ref[q].astype(U32)
+        valid = page >= 0
+        W = planes_ref.shape[2]
+        S = W * 32
+
+        # --- the bit-serial scan: key_bits steps, all slots in parallel ---
+        mismatch = jnp.zeros((1, W), U32)
+        for j in range(key_bits):                            # static unroll: b steps
+            qbit = (query >> U32(j)) & U32(1)
+            qword = jnp.where(qbit > 0, U32(0xFFFFFFFF), U32(0))
+            plane = planes_ref[0, j, :].reshape(1, W)
+            mismatch = mismatch | (plane ^ qword)
+        match_words = ~mismatch                              # (1, W)
+
+        # --- one-time extraction (the RLU readout, not part of the b-scan) ---
+        bit_i = jax.lax.broadcasted_iota(jnp.int32, (W, 32), 1).astype(U32)
+        words = jnp.broadcast_to(match_words.reshape(W, 1), (W, 32))
+        bits = ((words >> bit_i) & U32(1)) > 0               # (W, 32) slot matches
+        match = bits.reshape(1, S) & valid
+        any_match = jnp.any(match)
+        slot_iota = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
+        slot = jnp.min(jnp.where(match, slot_iota, jnp.int32(2**30)))
+        onehot = (slot_iota == slot) & match
+        val = jnp.max(jnp.where(onehot, vals_ref[...], U32(0)))
+
+        already = out_ref[0, 1] > U32(0)
+
+        @pl.when(any_match & jnp.logical_not(already))
+        def _write():
+            out_ref[0, 0] = val
+            out_ref[0, 1] = U32(1)
+            out_ref[0, 2] = page.astype(U32)
+            out_ref[0, 3] = slot.astype(U32)
+
+    return _kernel
+
+
+def probe_pages_bitserial(planes, val_pages, queries, pages, key_bits: int,
+                          *, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qn, C = pages.shape
+    P, b, W = planes.shape
+    assert b == key_bits
+    S = val_pages.shape[1]
+    assert S == W * 32
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(qn, C),
+        in_specs=[
+            pl.BlockSpec((1, b, W), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0, 0)),
+            pl.BlockSpec((1, S), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, LINE), lambda q, c, pages, queries: (q, 0)),
+    )
+    out = pl.pallas_call(
+        _make_kernel(key_bits),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((qn, LINE), U32),
+        interpret=interpret,
+    )(pages.astype(jnp.int32), queries.astype(U32), planes, val_pages)
+    return out[:, 0], out[:, 1] > 0

@@ -1,0 +1,84 @@
+"""Performance-optimized HashMem probe kernel (paper §2.2) — TPU-native form.
+
+Paper mechanism: many comparison units pitch-matched under the row buffer
+compare *all* keys of the activated row simultaneously (CAM semantics).
+
+TPU adaptation (DESIGN.md §2): one grid step == one row activation.  The
+BlockSpec index_map uses the scalar-prefetched page list (the RLU command
+stream) to "activate" the page row into VMEM; the 8x128 VPU lanes are the
+pitch-matched comparators — the whole row is compared in O(1) vector ops.
+Because TPU lanes are 32-bit, the compare is element-parallel AND
+bit-parallel (in DRAM the sense amps force bit-serial; see probe_bitserial
+for the faithful bit-serial variant).
+
+Grid: (Q, C) — C (chain position) iterates fastest and accumulates
+first-match results into a 128-lane output "cache line" per query, matching
+the paper's RLU returning the value padded to a cache line (§2.5).
+
+Output cache-line layout (uint32 lanes): [value, found, page, slot, 0...].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+U32 = jnp.uint32
+LINE = 128  # output cache line width (lanes)
+
+
+def _kernel(pages_ref, queries_ref, keys_ref, vals_ref, out_ref):
+    c = pl.program_id(1)
+    q = pl.program_id(0)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    page = pages_ref[q, c]
+    query = queries_ref[q]
+    valid = page >= 0
+
+    row = keys_ref[...]                                      # (1, S) uint32
+    match = (row == query) & valid                           # element-parallel compare
+    any_match = jnp.any(match)
+
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, row.shape, 1)
+    slot = jnp.min(jnp.where(match, slot_iota, jnp.int32(2**30)))
+    onehot = (slot_iota == slot) & match
+    val = jnp.max(jnp.where(onehot, vals_ref[...], U32(0)))
+
+    already = out_ref[0, 1] > U32(0)
+
+    @pl.when(any_match & jnp.logical_not(already))
+    def _write():
+        out_ref[0, 0] = val
+        out_ref[0, 1] = U32(1)
+        out_ref[0, 2] = page.astype(U32)
+        out_ref[0, 3] = slot.astype(U32)
+
+
+def probe_pages_perf(key_pages, val_pages, queries, pages, *, interpret=None):
+    """(values (Q,) u32, found (Q,) bool).  See module docstring."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qn, C = pages.shape
+    P, S = key_pages.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,       # pages, queries
+        grid=(qn, C),
+        in_specs=[
+            pl.BlockSpec((1, S), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0)),
+            pl.BlockSpec((1, S), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, LINE), lambda q, c, pages, queries: (q, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((qn, LINE), U32),
+        interpret=interpret,
+    )(pages.astype(jnp.int32), queries.astype(U32), key_pages, val_pages)
+    return out[:, 0], out[:, 1] > 0

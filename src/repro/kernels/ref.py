@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the HashMem probe kernels.
+
+All backends implement the same contract:
+
+  probe_pages(key_pages (P,S) u32, val_pages (P,S) u32,
+              queries (Q,) u32, pages (Q,C) i32 [-1 padded])
+      -> (values (Q,) u32, found (Q,) bool)
+
+First-match-in-chain-order semantics; sentinel keys (EMPTY/TOMBSTONE) never
+match because user keys are constrained below them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+
+def probe_pages_ref(key_pages, val_pages, queries, pages):
+    qn, C = pages.shape
+    S = key_pages.shape[1]
+    safe = jnp.maximum(pages, 0)
+    rows = key_pages[safe]                                   # (Q, C, S)
+    vrows = val_pages[safe]                                  # (Q, C, S)
+    match = (rows == queries[:, None, None].astype(U32)) & (pages >= 0)[:, :, None]
+    flat = match.reshape(qn, C * S)
+    found = jnp.any(flat, axis=1)
+    idx = jnp.argmax(flat, axis=1)                           # first match
+    vals = vrows.reshape(qn, C * S)[jnp.arange(qn), idx]
+    return jnp.where(found, vals, U32(0)), found
+
+
+def probe_bitplanes_ref(planes, val_pages, queries, pages, key_bits: int):
+    """Oracle for the bit-serial backend: operates on the bit-plane layout
+    directly (plane-XOR-accumulate), mirroring the kernel's algorithm in
+    pure jnp.  Must agree with probe_pages_ref on the same logical content."""
+    qn, C = pages.shape
+    P, b, W = planes.shape
+    assert b == key_bits
+    S = W * 32
+    safe = jnp.maximum(pages, 0)
+    pl_rows = planes[safe]                                   # (Q, C, b, W)
+    q = queries.astype(U32)
+    j = jnp.arange(key_bits, dtype=U32)
+    qbits = ((q[:, None] >> j) & U32(1)).astype(bool)        # (Q, b)
+    qwords = jnp.where(qbits, U32(0xFFFFFFFF), U32(0))       # (Q, b)
+    mism = jnp.bitwise_or.reduce(pl_rows ^ qwords[:, None, :, None], axis=2)  # (Q,C,W)
+    mwords = ~mism                                           # (Q, C, W)
+    i = jnp.arange(32, dtype=U32)
+    bits = ((mwords[..., None] >> i) & U32(1)).astype(bool)  # (Q,C,W,32)
+    match = bits.reshape(qn, C, S) & (pages >= 0)[:, :, None]
+    flat = match.reshape(qn, C * S)
+    found = jnp.any(flat, axis=1)
+    idx = jnp.argmax(flat, axis=1)
+    vrows = val_pages[safe].reshape(qn, C * S)
+    vals = vrows[jnp.arange(qn), idx]
+    return jnp.where(found, vals, U32(0)), found

@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the 512-chip production meshes;
+# smoke tests and benchmarks see the single real CPU device.
+if os.environ.get("REPRO_HOST_DEVICES"):   # test-scale override (still pre-jax)
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_HOST_DEVICES"])
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+Per cell this produces a JSON artifact with:
+  * memory_analysis (bytes/device: argument, output, temp, peak)  [fits proof]
+  * cost_analysis   (per-device HLO FLOPs / bytes accessed)
+  * collective bytes parsed from the partitioned HLO text, by op kind
+  * compile wall time, HLO sizes
+
+Modes (--probe):
+  full   — production lowering (scan over layer units).  Memory + collective
+           schedule are exact here; FLOPs are NOT (XLA counts a while-loop
+           body once — verified; see EXPERIMENTS.md §Roofline method).
+  unit1 / unit2 — cost probes: scan_layers=False, inner_unroll=True with 1 or
+           2 layer-units.  roofline.py extrapolates: per_unit = c2 - c1;
+           total = c1 + (n_units - 1) * per_unit  (linear in depth, exact for
+           the layer-homogeneous stacks used here).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+import argparse
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, ServeConfig, get_config, cells
+from repro.configs.base import OptimConfig
+from repro.distributed import steps
+from repro.launch.mesh import make_production_mesh
+from repro.models import model
+from repro.optim import init_opt_state
+
+WHISPER_DECODE_ENC_FRAMES = 1504  # 30 s of audio (whisper frame rate), padded
+
+# per-arch training-regime overrides (memory fit on 16GB v5e; DESIGN.md §5)
+TRAIN_OVERRIDES = {
+    "llama4-maverick-400b-a17b": dict(param_dtype="bfloat16"),
+    "jamba-v0.1-52b": dict(param_dtype="bfloat16"),
+}
+OPTIM_OVERRIDES = {
+    "llama4-maverick-400b-a17b": OptimConfig(state_dtype="bfloat16"),
+    "jamba-v0.1-52b": OptimConfig(state_dtype="bfloat16"),
+}
+
+COLLECTIVE_RE = re.compile(
+    r"(\S+)\s*=\s*(\w[\w<>\[\], ]*)\s(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)")
+SHAPE_RE = re.compile(r"(f32|f16|bf16|s32|u32|s8|u8|pred|f64|s64|u64)\[([\d,]*)\]")
+
+DTYPE_BYTES = {"f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device collective bytes by op kind from partitioned HLO."""
+    out = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"= ((?:\([^)]*\)|\S+)) (all-gather|all-reduce|"
+                      r"reduce-scatter|all-to-all|collective-permute)(-start)?\(",
+                      line)
+        if not m:
+            continue
+        kind = m.group(2)
+        shapes = SHAPE_RE.findall(m.group(1))
+        nbytes = 0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        # ring all-reduce moves ~2x the payload
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        out[kind] = out.get(kind, 0.0) + nbytes * factor
+        out.setdefault("_count_" + kind, 0)
+        out["_count_" + kind] += 1
+    out["total_bytes"] = sum(v for k, v in out.items()
+                             if not k.startswith("_") and k != "total_bytes")
+    return out
+
+
+def _cfg_for(arch: str, shape_name: str, probe: str):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        cfg = cfg.replace(**TRAIN_OVERRIDES.get(arch, {}))
+    else:
+        cfg = cfg.replace(param_dtype="bfloat16")  # inference weights bf16
+    if os.environ.get("REPRO_OPT"):
+        # hillclimb configuration (EXPERIMENTS.md §Perf): EP MoE dispatch +
+        # sqrt-remat for the mLSTM matrix-memory scan
+        if cfg.num_experts:
+            cfg = cfg.replace(moe_impl="ep")
+        if cfg.family == "ssm":
+            cfg = cfg.replace(mlstm_scan_groups=8)
+    if probe in ("unit1", "unit2"):
+        from repro.models.transformer import scan_unit_size
+        unit = scan_unit_size(cfg)
+        n = unit if probe == "unit1" else 2 * unit
+        kw = dict(num_layers=n, scan_layers=False, inner_unroll=True)
+        if cfg.is_encoder_decoder:
+            kw["num_encoder_layers"] = 1 if probe == "unit1" else 2
+        # coarser mamba chunking keeps the unrolled-probe HLO tractable;
+        # selective-scan FLOPs are chunk-invariant to first order (only the
+        # associative-combine log factor moves, <3% of the block's FLOPs).
+        if shape.kind in ("train", "prefill"):
+            kw["mamba_chunk"] = min(max(shape.seq_len // 8, 64), 2048)
+        # mLSTM unrolled-bwd probes are intractable to compile; keep the
+        # chunk scan and let roofline.py add the analytic per-chunk term.
+        if cfg.family == "ssm":
+            kw["mlstm_unroll"] = False
+        cfg = cfg.replace(**kw)
+    return cfg, shape
+
+
+def lower_cell(arch: str, shape_name: str, mesh, probe: str = "full"):
+    """Lower+compile one cell; returns (compiled, meta)."""
+    cfg, shape = _cfg_for(arch, shape_name, probe)
+    meta = {"arch": arch, "shape": shape_name, "probe": probe,
+            "num_layers": cfg.num_layers, "mesh": dict(mesh.shape)}
+
+    # §Perf iteration 3 tried seq_shard=False for the ssm family (hypothesis:
+    # the recurrent blocks re-gather full S anyway) — REFUTED: without SP the
+    # TP'd projections move 6x MORE bytes (full-S activations per layer).
+    # SP stays on everywhere.
+    seq_shard = True
+    if shape.kind in ("train", "prefill"):
+        sds = model.input_specs(cfg, shape)
+        if shape.kind == "train":
+            oc = OPTIM_OVERRIDES.get(arch, OptimConfig())
+            _, jitted, pshard, oshard = steps.build_train_step(
+                cfg, oc, mesh, seq_shard=seq_shard)
+            def _init(k):
+                p = model.init_params(cfg, k)
+                return p, init_opt_state(p, oc)
+            params_sds, opt_sds = jax.eval_shape(_init, jax.random.PRNGKey(0))
+            lowered = jitted(sds).lower(params_sds, opt_sds, sds)
+        else:
+            # prefill: forward trunk + last-position logits
+            from repro.distributed import sharding as shd
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            pshard = shd.named(mesh, shd.param_specs(cfg, mesh))
+            ctx = shd.ShardCtx(mesh, seq_shard=seq_shard)
+
+            def prefill(params, batch):
+                x, _ = model.forward(params, cfg, batch, shard_ctx=ctx)
+                return model.logits_fn(params, cfg, x[:, -1:])
+
+            bshard = {k: NamedSharding(
+                mesh, P(shd.batch_spec(mesh, v.shape[0]),
+                        *([None] * (v.ndim - 1)))) for k, v in sds.items()}
+            params_sds = jax.eval_shape(
+                lambda k: model.init_params(cfg, k), jax.random.PRNGKey(0))
+            lowered = jax.jit(prefill, in_shardings=(pshard, bshard)) \
+                .lower(params_sds, sds)
+    else:  # decode
+        scfg = ServeConfig(model=cfg, shape=shape)
+        _, jitted, ctx, pshard = steps.build_serve_step(cfg, scfg, mesh)
+        B = shape.global_batch
+        params_sds = jax.eval_shape(
+            lambda k: model.init_params(cfg, k), jax.random.PRNGKey(0))
+        if cfg.is_encoder_decoder:
+            frames = jax.ShapeDtypeStruct(
+                (B, WHISPER_DECODE_ENC_FRAMES, cfg.d_model), jnp.bfloat16)
+            states_sds = jax.eval_shape(
+                lambda p, f: model.init_decode_states(p, cfg, B, ctx,
+                                                      enc_frames=f),
+                params_sds, frames)
+        else:
+            states_sds = jax.eval_shape(
+                lambda p: model.init_decode_states(p, cfg, B, ctx), params_sds)
+        inp = model.input_specs(cfg, shape, scfg, ctx)
+        meta["n_pages"] = ctx.n_pages
+        meta["pool_pages"] = ctx.pool_pages
+        lowered = jitted(states_sds).lower(
+            params_sds, states_sds, inp["tokens"], inp["pos"],
+            inp["block_table"])
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    meta["compile_s"] = time.time() - t0
+    return compiled, meta
+
+
+def analyze(compiled, meta) -> dict:
+    ca = compiled.cost_analysis() or {}
+    rec = dict(meta)
+    rec["flops_per_device"] = float(ca.get("flops", 0.0))
+    rec["bytes_per_device"] = float(ca.get("bytes accessed", 0.0))
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "peak_memory_in_bytes"):
+            v = getattr(ma, f, None)
+            if v is not None:
+                rec[f] = int(v)
+    except Exception as e:  # CPU backend may not implement it
+        rec["memory_analysis_error"] = str(e)
+    txt = compiled.as_text()
+    rec["collectives"] = parse_collectives(txt)
+    rec["hlo_chars"] = len(txt)
+    return rec
+
+
+def _mesh_for(mesh_kind: str):
+    """Production mesh, or a test-scale override via REPRO_MESH=d,m[,p]."""
+    ov = os.environ.get("REPRO_MESH")
+    if ov:
+        dims = tuple(int(x) for x in ov.split(","))
+        from repro.launch.mesh import make_mesh
+        if mesh_kind == "multi":
+            return make_mesh((2,) + dims, ("pod", "data", "model"))
+        return make_mesh(dims, ("data", "model"))
+    return make_production_mesh(multi_pod=(mesh_kind == "multi"))
+
+
+def run_cell(arch, shape_name, mesh_kind, probe, out_dir: Path):
+    mesh = _mesh_for(mesh_kind)
+    name = f"{arch}__{shape_name}__{mesh_kind}__{probe}.json"
+    out = out_dir / name
+    if out.exists():
+        print(f"[skip] {name}")
+        return json.loads(out.read_text())
+    t0 = time.time()
+    try:
+        compiled, meta = lower_cell(arch, shape_name, mesh, probe)
+        rec = analyze(compiled, meta)
+        rec["ok"] = True
+        del compiled
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "probe": probe,
+               "mesh_kind": mesh_kind, "ok": False, "error": repr(e)[:2000]}
+    rec["wall_s"] = time.time() - t0
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    status = "ok" if rec.get("ok") else "FAIL"
+    print(f"[{status}] {name}  wall={rec['wall_s']:.1f}s "
+          f"flops/dev={rec.get('flops_per_device', 0):.3e} "
+          f"coll={rec.get('collectives', {}).get('total_bytes', 0):.3e}B")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--probe", default="full",
+                    choices=["full", "unit1", "unit2", "all"])
+    ap.add_argument("--all", action="store_true", help="all assigned cells")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    todo = cells() if args.all else [(args.arch, args.shape)]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    probes = ["full", "unit1", "unit2"] if args.probe == "all" else [args.probe]
+
+    failures = 0
+    jobs = []
+    for pr in probes:                      # all 'full' cells first (deliverable e)
+        for arch, shape_name in todo:
+            for mk in meshes:
+                if pr != "full" and mk == "multi":
+                    continue  # cost probes are single-pod (roofline table)
+                jobs.append((arch, shape_name, mk, pr))
+    for arch, shape_name, mk, pr in jobs:
+        rec = run_cell(arch, shape_name, mk, pr, out_dir)
+        failures += 0 if rec.get("ok") else 1
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: all 10 assigned architectures via repro.models.model."""

@@ -1,0 +1,136 @@
+"""GQA attention: chunked (flash-style) train/prefill + decode paths.
+
+The train/prefill path never materializes the full (S, S) score matrix: it
+scans over KV chunks carrying (max, sum, acc) — the standard online-softmax
+used by FlashAttention, expressed in pure jnp so XLA fuses it per chunk.
+Sliding-window (h2o-danube) and causal masks are applied per chunk.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, head_rms_norm, leaf, rope
+
+NEG_INF = -1e30
+
+
+def init(key, cfg):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": dense_init(ks[1], d, (d, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": dense_init(ks[2], d, (d, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": dense_init(ks[3], H * hd, (H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = leaf(jnp.ones((hd,), jnp.float32), "head_dim")
+        p["k_scale"] = leaf(jnp.ones((hd,), jnp.float32), "head_dim")
+    return p
+
+
+def qkv(params, cfg, x, positions):
+    """x (B,S,d) -> q (B,S,H,hd), k,v (B,S,K,hd), rope applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = head_rms_norm(q, params["q_scale"], cfg.norm_eps)
+        k = head_rms_norm(k, params["k_scale"], cfg.norm_eps)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_proj(params, cfg, o):
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(o.dtype))
+
+
+def _chunk_attend(q, k, v, qpos, kpos, causal, window):
+    """One (q-chunk, kv-chunk) tile. q (B,cq,K,G,hd) k/v (B,ck,K,hd).
+
+    Returns scores-applied partials (m, l, acc) for online softmax.
+    """
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqkgh,bckh->bkgqc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale          # (B,K,G,cq,ck)
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                # (B,K,G,cq)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgqc,bckh->bkgqh", p, v.astype(jnp.float32))
+    return m, l, acc
+
+
+def chunked_attention(q, k, v, cfg, *, causal=True, chunk=None,
+                      q_offset=0, kv_len=None):
+    """Flash-style attention.  q (B,Sq,H,hd), k/v (B,Skv,K,hd).
+
+    Online softmax over KV chunks; GQA via head grouping.  Skv must be a
+    multiple of the chunk size (callers pad shapes; assigned shapes are
+    powers of two).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    chunk = min(chunk or cfg.attn_chunk, Skv)
+    if Skv % chunk:
+        import math
+        chunk = math.gcd(chunk, Skv)
+    n_chunks = Skv // chunk
+
+    qg = q.reshape(B, Sq, K, G, hd)
+    qpos = q_offset + jnp.arange(Sq)
+    window = cfg.sliding_window
+
+    def body(carry, ck_idx):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, ck_idx * chunk, chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, ck_idx * chunk, chunk, 1)
+        kpos = ck_idx * chunk + jnp.arange(chunk)
+        mc, lc, ac = _chunk_attend(qg, ks, vs, qpos, kpos, causal, window)
+        m_new = jnp.maximum(m, mc)
+        r_old = jnp.exp(m - m_new)
+        r_new = jnp.exp(mc - m_new)
+        l_new = l * r_old + lc * r_new
+        acc_new = acc * r_old[..., None] + ac * r_new[..., None]
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, hd), jnp.float32)
+    from repro.models.scan_utils import maybe_scan
+    (m, l, acc), _ = maybe_scan(body, (m0, l0, a0), jnp.arange(n_chunks),
+                                unroll=cfg.inner_unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]           # (B,K,G,Sq,hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention_dense(q, k_cache, v_cache, seq_len, cfg):
+    """Single-token decode vs a dense cache.  q (B,1,H,hd),
+    k_cache/v_cache (B,Smax,K,hd), seq_len (B,) valid lengths."""
+    B, _, H, hd = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bckh->bkgc", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * (hd ** -0.5)
+    pos = jnp.arange(k_cache.shape[1])
+    valid = pos[None, :] < seq_len[:, None]
+    if cfg.sliding_window:
+        valid &= pos[None, :] >= seq_len[:, None] - cfg.sliding_window
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,154 @@
+"""Encoder-decoder stack (whisper-tiny).
+
+The audio conv frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, frames, d_model) + sinusoidal positions.
+The decoder is a causal transformer with cross-attention; decode uses the
+paged KV cache for self-attention and dense (precomputed) encoder KV for
+cross-attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import paged_kv
+from repro.models import attention, mlp
+from repro.models.layers import layer_norm, norm_init, sinusoid_positions
+from repro.models.transformer import DecodeCtx, _paged_attn_sub
+
+
+def init_cross(key, cfg):
+    return attention.init(key, cfg)
+
+
+def init_encoder_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": norm_init(cfg.d_model, centered=True),
+        "attn": attention.init(ks[0], cfg),
+        "norm2": norm_init(cfg.d_model, centered=True),
+        "ffn": mlp.init_gelu_mlp(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_decoder_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": norm_init(cfg.d_model, centered=True),
+        "attn": attention.init(ks[0], cfg),
+        "norm_x": norm_init(cfg.d_model, centered=True),
+        "cross": attention.init(ks[1], cfg),
+        "norm2": norm_init(cfg.d_model, centered=True),
+        "ffn": mlp.init_gelu_mlp(ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_stacks(key, cfg):
+    from repro.models.layers import Axes, is_leaf
+    ke, kd = jax.random.split(key)
+    enc = [init_encoder_layer(k, cfg)
+           for k in jax.random.split(ke, cfg.num_encoder_layers)]
+    dec = [init_decoder_layer(k, cfg)
+           for k in jax.random.split(kd, cfg.num_layers)]
+    stack = lambda layers: jax.tree.map(
+        lambda *xs: (jnp.stack([x[0] for x in xs]),
+                     Axes(("layers",) + tuple(xs[0][1]))),
+        *layers, is_leaf=is_leaf)
+    return {"encoder": stack(enc), "decoder": stack(dec)}
+
+
+def encode(params, cfg, frames):
+    """frames (B, S_enc, d) stub embeddings -> encoder output (B, S_enc, d)."""
+    B, S, d = frames.shape
+    x = frames + sinusoid_positions(S, d)[None].astype(frames.dtype)
+
+    def body(x, p):
+        h = layer_norm(x, p["norm1"], cfg.norm_eps)
+        q, k, v = attention.qkv(p["attn"], cfg, h, None)   # no rope: abs pos
+        o = attention.chunked_attention(q, k, v, cfg, causal=False)
+        x = x + attention.out_proj(p["attn"], cfg, o)
+        h2 = layer_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlp.gelu_mlp(p["ffn"], h2)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    from repro.models.scan_utils import maybe_scan
+    x, _ = maybe_scan(body, x, params["encoder"], unroll=not cfg.scan_layers)
+    return x
+
+
+def cross_kv(params, cfg, enc_out):
+    """Precompute per-layer cross-attention K/V: (L, B, S_enc, K, hd)."""
+    def body(_, p):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"].astype(enc_out.dtype))
+        return None, (k, v)
+    _, (ek, ev) = jax.lax.scan(body, None, params["decoder"])
+    return ek, ev
+
+
+def _cross_sub(p, cfg, h, ek, ev):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"].astype(h.dtype))
+    o = attention.chunked_attention(q, ek, ev, cfg, causal=False,
+                                    chunk=min(cfg.attn_chunk, ek.shape[1]))
+    return jnp.einsum("bshk,hkd->bsd", o, p["cross"]["wo"].astype(h.dtype))
+
+
+def decode_train(params, cfg, x, enc_out, positions):
+    """Teacher-forced decoder forward.  x (B,S_dec,d) token embeddings."""
+    def body(x, p):
+        h = layer_norm(x, p["norm1"], cfg.norm_eps)
+        q, k, v = attention.qkv(p["attn"], cfg, h, positions)
+        o = attention.chunked_attention(q, k, v, cfg, causal=True)
+        x = x + attention.out_proj(p["attn"], cfg, o)
+        hx = layer_norm(x, p["norm_x"], cfg.norm_eps)
+        ek = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"].astype(x.dtype))
+        ev = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"].astype(x.dtype))
+        x = x + _cross_sub(p, cfg, hx, ek, ev)
+        h2 = layer_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlp.gelu_mlp(p["ffn"], h2)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    from repro.models.scan_utils import maybe_scan
+    x, _ = maybe_scan(body, x, params["decoder"], unroll=not cfg.scan_layers)
+    return x
+
+
+def init_decode_states(cfg, B, ctx: DecodeCtx, enc_kv, kv_dtype=jnp.bfloat16):
+    """Per-decoder-layer states: paged self-KV pools + static cross KV."""
+    L = cfg.num_layers
+    k_pool, v_pool = paged_kv.init_pool(
+        ctx.pool_pages, ctx.page_tokens, cfg.num_kv_heads, cfg.head_dim, kv_dtype)
+    ek, ev = enc_kv                                        # (L,B,Se,K,hd)
+    return {
+        "k_pool": jnp.broadcast_to(k_pool[None], (L,) + k_pool.shape).copy(),
+        "v_pool": jnp.broadcast_to(v_pool[None], (L,) + v_pool.shape).copy(),
+        "ek": ek, "ev": ev,
+    }
+
+
+def decode_step_stack(params, cfg, x, states, block_table, pos, ctx):
+    """One decoder token step.  x (B,1,d)."""
+    def body(x, scans):
+        p, st = scans
+        h = layer_norm(x, p["norm1"], cfg.norm_eps)
+        sub, new_kv = _paged_attn_sub(p["attn"], cfg, h, st, block_table, pos, ctx)
+        x = x + sub
+        hx = layer_norm(x, p["norm_x"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", hx, p["cross"]["wq"].astype(x.dtype))
+        o = attention.decode_attention_dense(
+            q, st["ek"], st["ev"],
+            jnp.full((x.shape[0],), st["ek"].shape[1], jnp.int32),
+            cfg.replace(sliding_window=0))
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["cross"]["wo"].astype(x.dtype))
+        h2 = layer_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlp.gelu_mlp(p["ffn"], h2)
+        return x, {**new_kv, "ek": st["ek"], "ev": st["ev"]}
+
+    from repro.models.scan_utils import maybe_scan
+    x, new_states = maybe_scan(body, x, (params["decoder"], states),
+                               unroll=not cfg.scan_layers)
+    return x, new_states

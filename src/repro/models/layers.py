@@ -1,0 +1,109 @@
+"""Shared model layers: norms, RoPE, embeddings, param-tree helpers.
+
+Parameter convention: every init function returns a pytree whose leaves are
+``(array, logical_axes)`` tuples; ``split_params`` separates them into a
+params tree and an axes tree (consumed by distributed/sharding.py).
+Logical axis names: batch, seq, embed, heads, kv_heads, head_dim, mlp,
+vocab, expert, layers, state, conv, dt_rank.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Axes(tuple):
+    """Logical-axis names as a LEAFLESS pytree node: static metadata that
+    survives jax.eval_shape / tracing (strings are not valid JAX leaves)."""
+
+
+jax.tree_util.register_pytree_node(
+    Axes, lambda a: ((), tuple(a)), lambda aux, _: Axes(aux))
+
+
+def leaf(arr, *axes):
+    assert arr.ndim == len(axes), (arr.shape, axes)
+    return (arr, Axes(axes))
+
+
+def is_leaf(x):
+    return isinstance(x, tuple) and len(x) == 2 and isinstance(x[1], Axes)
+
+
+def split_params(tree):
+    params = jax.tree.map(lambda t: t[0], tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda t: t[1], tree, is_leaf=is_leaf)
+    return params, axes
+
+
+def dense_init(key, fan_in, shape, axes, dtype=jnp.float32):
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return leaf(jax.random.normal(key, shape, dtype) * scale, *axes)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return leaf(jax.random.normal(key, (vocab, d), dtype) * 0.02, "vocab", "embed")
+
+
+def norm_init(d, centered=False):
+    p = {"scale": leaf(jnp.ones((d,), jnp.float32), "embed")}
+    if centered:
+        p["bias"] = leaf(jnp.zeros((d,), jnp.float32), "embed")
+    return p
+
+
+def rms_norm(x, params, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+def layer_norm(x, params, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"]
+    if "bias" in params:
+        y = y + params["bias"]
+    return y.astype(dt)
+
+
+def head_rms_norm(x, scale, eps=1e-5):
+    """QK-norm: RMS over head_dim of (B, S, H, hd)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding, llama 'rotate-half' convention.
+
+    x: (B, S, H, hd) with even hd; positions: (B, S) int32.
+    """
+    B, S, H, hd = x.shape
+    half = hd // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+def sinusoid_positions(S, d):
+    pos = np.arange(S)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    out = np.zeros((S, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)

@@ -1,0 +1,124 @@
+"""Mamba (S6) block: chunked selective scan, jamba's SSM layer.
+
+Training uses a chunked scan: lax.scan over chunks of length cfg.mamba_chunk,
+associative_scan (parallel) within each chunk, recurrent state carried across
+chunks — the standard memory/parallelism trade for selective SSMs on TPU.
+Decode is the exact single-step recurrence with (conv, ssm) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, leaf
+
+
+def init(key, cfg):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state_dim
+    dtr, cw = cfg.dt_rank, cfg.ssm_conv_width
+    ks = jax.random.split(key, 7)
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    return {
+        "wx": dense_init(ks[0], d, (d, di), ("embed", "mlp")),
+        "wz": dense_init(ks[1], d, (d, di), ("embed", "mlp")),
+        "conv_w": dense_init(ks[2], cw, (cw, di), ("conv", "mlp")),
+        "conv_b": leaf(jnp.zeros((di,), jnp.float32), "mlp"),
+        "x_proj": dense_init(ks[3], di, (di, dtr + 2 * N), ("mlp", "dt_rank")),
+        "dt_proj": dense_init(ks[4], dtr, (dtr, di), ("dt_rank", "mlp")),
+        "dt_bias": leaf(jnp.full((di,), -4.6, jnp.float32), "mlp"),  # softplus^-1(0.01)
+        "A_log": leaf(jnp.log(A), "mlp", "state"),
+        "D": leaf(jnp.ones((di,), jnp.float32), "mlp"),
+        "out_proj": dense_init(ks[5], di, (di, d), ("mlp", "embed")),
+    }
+
+
+def _ssm_inputs(params, cfg, xc):
+    """xc (B,L,di) conv+silu output -> discretized dA, dBx, C."""
+    N, dtr = cfg.ssm_state_dim, cfg.dt_rank
+    proj = jnp.einsum("bld,dk->blk", xc, params["x_proj"].astype(xc.dtype))
+    dt_raw, Bs, Cs = jnp.split(proj.astype(jnp.float32), [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rd->bld", dt_raw, params["dt_proj"]) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                                   # (di,N)
+    dA = jnp.exp(dt[..., None] * A[None, None])                     # (B,L,di,N)
+    dBx = dt[..., None] * Bs[:, :, None, :] * xc.astype(jnp.float32)[..., None]
+    return dA, dBx, Cs
+
+
+def _conv(params, cfg, x, conv_state=None):
+    """Causal depthwise conv1d, width cw.  x (B,S,di)."""
+    cw = cfg.ssm_conv_width
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                          # (B,S+cw-1,di)
+    w = params["conv_w"].astype(x.dtype)                            # (cw,di)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    out = out + params["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(cw - 1):] if cw > 1 else pad
+    return out, new_state
+
+
+def apply(params, cfg, x, *, chunk=None):
+    """Training/prefill forward.  x (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state_dim
+    L = min(chunk or cfg.mamba_chunk, S)
+    assert S % L == 0
+    nc = S // L
+    dt = x.dtype
+
+    xi = jnp.einsum("bsd,de->bse", x, params["wx"].astype(dt))
+    z = jnp.einsum("bsd,de->bse", x, params["wz"].astype(dt))
+    xc, _ = _conv(params, cfg, xi)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(dt)
+
+    xc_c = xc.reshape(B, nc, L, di).transpose(1, 0, 2, 3)           # (nc,B,L,di)
+
+    def chunk_step(h, xck):
+        dA, dBx, Cs = _ssm_inputs(params, cfg, xck)                 # (B,L,di,N)
+        # associative scan within the chunk: elements (a, b); h_t = a_t h_{t-1} + b_t
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+        a_cum, s = jax.lax.associative_scan(comb, (dA, dBx), axis=1)
+        hs = a_cum * h[:, None] + s                                 # (B,L,di,N)
+        y = jnp.einsum("blds,bls->bld", hs, Cs)                     # (B,L,di)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    from repro.models.scan_utils import maybe_scan
+    def chunk_step2(h, xck):
+        h2, y = chunk_step(h, xck)
+        return h2, y
+    _, ys = maybe_scan(chunk_step2, h0, xc_c, unroll=cfg.inner_unroll)  # (nc,B,L,di)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di).astype(jnp.float32)
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("bse,ed->bsd", y.astype(dt), params["out_proj"].astype(dt))
+
+
+def init_state(cfg, B, dtype=jnp.float32):
+    di, N, cw = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_conv_width
+    return {
+        "conv": jnp.zeros((B, cw - 1, di), dtype),
+        "ssm": jnp.zeros((B, di, N), jnp.float32),
+    }
+
+
+def decode_step(params, cfg, state, x):
+    """x (B,1,d) -> (y (B,1,d), new state).  Exact recurrence."""
+    dt = x.dtype
+    xi = jnp.einsum("bsd,de->bse", x, params["wx"].astype(dt))
+    z = jnp.einsum("bsd,de->bse", x, params["wz"].astype(dt))
+    xc, conv_state = _conv(params, cfg, xi, state["conv"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(dt)             # (B,1,di)
+    dA, dBx, Cs = _ssm_inputs(params, cfg, xc)
+    h = dA[:, 0] * state["ssm"] + dBx[:, 0]                         # (B,di,N)
+    y = jnp.einsum("bds,bs->bd", h, Cs[:, 0])[:, None]              # (B,1,di)
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(dt), params["out_proj"].astype(dt))
+    return out, {"conv": conv_state, "ssm": h}

@@ -1,0 +1,39 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_swiglu(key, d, ff):
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(ks[0], d, (d, ff), ("embed", "mlp")),
+        "up": dense_init(ks[1], d, (d, ff), ("embed", "mlp")),
+        "down": dense_init(ks[2], ff, (ff, d), ("mlp", "embed")),
+    }
+
+
+def swiglu(params, x):
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, params["gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, params["up"].astype(dt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    return jnp.einsum("bsf,fd->bsd", h, params["down"].astype(dt))
+
+
+def init_gelu_mlp(key, d, ff):
+    ks = jax.random.split(key, 2)
+    return {
+        "up": dense_init(ks[0], d, (d, ff), ("embed", "mlp")),
+        "down": dense_init(ks[1], ff, (ff, d), ("mlp", "embed")),
+    }
+
+
+def gelu_mlp(params, x):
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, params["up"].astype(dt))
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+    return jnp.einsum("bsf,fd->bsd", h, params["down"].astype(dt))

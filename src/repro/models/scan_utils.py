@@ -1,0 +1,29 @@
+"""maybe_scan: lax.scan that can unroll to straight-line HLO.
+
+XLA's HloCostAnalysis counts a while-loop body exactly ONCE regardless of
+trip count (verified empirically — see EXPERIMENTS.md §Roofline method).
+The roofline cost probes therefore lower small unrolled variants; production
+lowering keeps lax.scan for compile-time/HLO-size sanity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maybe_scan(body, init, xs, *, unroll: bool, length=None):
+    """jax.lax.scan(body, init, xs) | python-loop unrolled equivalent."""
+    if not unroll:
+        return jax.lax.scan(body, init, xs, length=length)
+    n = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        x_i = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys

@@ -1,0 +1,262 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + sequential sLSTM.
+
+mLSTM (matrix memory, exponential gating) is trained chunkwise: within a
+chunk the output is an attention-like masked product with log-gate decays;
+across chunks the (C, n, m) state recurs — the stabilized chunkwise form
+(xLSTM paper App. A / TFLA).  The stabilizer m is carried so exp() never
+overflows.  sLSTM (scalar memory, block-diagonal recurrence) is inherently
+sequential and runs as a lax.scan over time.
+
+States are stored stabilized: C_tilde = C*exp(-m), n_tilde = n*exp(-m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, leaf
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    d, H, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    assert H * dh == d, "xlstm cell operates at model width (H*hd == d)"
+    ks = jax.random.split(key, 8)
+    return {
+        "wup": dense_init(ks[0], d, (d, 2 * d), ("embed", "mlp")),
+        "wq": dense_init(ks[1], d, (d, H, dh), ("embed", "heads", "head_dim")),
+        "wk": dense_init(ks[2], d, (d, H, dh), ("embed", "heads", "head_dim")),
+        "wv": dense_init(ks[3], d, (d, H, dh), ("embed", "heads", "head_dim")),
+        "wi": dense_init(ks[4], d, (d, H), ("embed", "heads")),
+        "wf": dense_init(ks[5], d, (d, H), ("embed", "heads")),
+        "gn_scale": leaf(jnp.ones((H, dh), jnp.float32), "heads", "head_dim"),
+        "wdown": dense_init(ks[6], d, (d, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_proj(params, cfg, x):
+    dt = x.dtype
+    H, dh = cfg.num_heads, cfg.head_dim
+    up = jnp.einsum("bsd,de->bse", x, params["wup"].astype(dt))
+    xm, z = jnp.split(up, 2, axis=-1)                               # (B,S,d) each
+    q = jnp.einsum("bsd,dhk->bhsk", xm, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bhsk", xm, params["wk"].astype(dt)) * (dh ** -0.5)
+    v = jnp.einsum("bsd,dhk->bhsk", xm, params["wv"].astype(dt))
+    log_i = jnp.einsum("bsd,dh->bhs", xm.astype(jnp.float32), params["wi"])
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bhs", xm.astype(jnp.float32), params["wf"]))
+    return q, k, v, log_i, log_f, z
+
+
+def _head_norm(h, scale, eps):
+    """h (B,H,S,dh): RMS per head."""
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    return h * jax.lax.rsqrt(var + eps) * scale[None, :, None, :]
+
+
+def _mlstm_chunk(carry, qkvif, cfg):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    carry: (C (B,H,dh,dh), n (B,H,dh), m (B,H)) stabilized states.
+    qkvif: q,k,v (B,H,L,dh) fp32; log_i, log_f (B,H,L).
+    """
+    C, n, m = carry
+    q, k, v, log_i, log_f = qkvif
+    L = q.shape[2]
+    b = jnp.cumsum(log_f, axis=-1)                                  # (B,H,L)
+    total = b[..., -1]                                              # (B,H)
+
+    # intra-chunk log decay D[t,s] = b_t - b_s + i_s, s<=t
+    D = b[..., :, None] - b[..., None, :] + log_i[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(mask, D, NEG_INF)
+
+    a = b + m[..., None]                                            # inter log-scale
+    m_t = jnp.maximum(jnp.max(D, axis=-1), a)                       # (B,H,L)
+    Dexp = jnp.where(mask, jnp.exp(D - m_t[..., None]), 0.0)
+    inter = jnp.exp(a - m_t)                                        # (B,H,L)
+
+    qk = jnp.einsum("bhtd,bhsd->bhts", q, k)
+    w = Dexp * qk                                                   # (B,H,L,L)
+    h_num = jnp.einsum("bhts,bhsd->bhtd", w, v) \
+        + inter[..., None] * jnp.einsum("bhtd,bhde->bhte", q, C)
+    n_dot = jnp.sum(w, axis=-1) + inter * jnp.einsum("bhtd,bhd->bht", q, n)
+    h = h_num / jnp.maximum(jnp.abs(n_dot), jnp.exp(-m_t))[..., None]
+
+    # state update to chunk end
+    g = total[..., None] - b + log_i                                # (B,H,L)
+    m_new = jnp.maximum(total + m, jnp.max(g, axis=-1))
+    scale_old = jnp.exp(total + m - m_new)                          # (B,H)
+    wk = jnp.exp(g - m_new[..., None])                              # (B,H,L)
+    C_new = scale_old[..., None, None] * C + \
+        jnp.einsum("bhl,bhld,bhle->bhde", wk, k, v)
+    n_new = scale_old[..., None] * n + jnp.einsum("bhl,bhld->bhd", wk, k)
+    return (C_new, n_new, m_new), h
+
+
+def apply_mlstm(params, cfg, x, *, chunk=None):
+    """x (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    H, dh = cfg.num_heads, cfg.head_dim
+    L = min(chunk or cfg.mlstm_chunk, S)
+    assert S % L == 0
+    nc = S // L
+    dt = x.dtype
+    q, k, v, log_i, log_f, z = _mlstm_proj(params, cfg, x)
+    f32 = lambda t: t.astype(jnp.float32)
+    qc = f32(q).reshape(B, H, nc, L, dh).transpose(2, 0, 1, 3, 4)
+    kc = f32(k).reshape(B, H, nc, L, dh).transpose(2, 0, 1, 3, 4)
+    vc = f32(v).reshape(B, H, nc, L, dh).transpose(2, 0, 1, 3, 4)
+    ic = log_i.reshape(B, H, nc, L).transpose(2, 0, 1, 3)
+    fc = log_f.reshape(B, H, nc, L).transpose(2, 0, 1, 3)
+
+    def step(carry, args):
+        return _mlstm_chunk(carry, args, cfg)
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    from repro.models.scan_utils import maybe_scan
+    G = cfg.mlstm_scan_groups
+    if G and nc % G == 0 and nc // G > 1 and not cfg.inner_unroll:
+        # two-level sqrt-remat: only G outer (C,n,m) states are saved for
+        # bwd; inner chunk states are recomputed per group.  Cuts the live
+        # bwd state of the (B,H,dh,dh) matrix memory by nc/G.
+        gi = nc // G
+        regroup = lambda t: t.reshape((G, gi) + t.shape[1:])
+        xs = jax.tree.map(regroup, (qc, kc, vc, ic, fc))
+
+        @jax.checkpoint
+        def group_step(carry, args):
+            return jax.lax.scan(step, carry, args)
+
+        _, hs = jax.lax.scan(group_step, (C0, n0, m0), xs)
+        hs = hs.reshape((nc,) + hs.shape[2:])
+    else:
+        _, hs = maybe_scan(step, (C0, n0, m0), (qc, kc, vc, ic, fc),
+                           unroll=cfg.inner_unroll and cfg.mlstm_unroll)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)            # (B,H,S,dh)
+    h = _head_norm(h, params["gn_scale"], cfg.norm_eps)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, d)
+    out = h * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("bse,ed->bsd", out.astype(dt), params["wdown"].astype(dt))
+
+
+def init_mlstm_state(cfg, B):
+    H, dh = cfg.num_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((B, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((B, H, dh), jnp.float32),
+        "m": jnp.zeros((B, H), jnp.float32),
+    }
+
+
+def decode_mlstm(params, cfg, state, x):
+    """Single-token exact recurrence.  x (B,1,d)."""
+    B = x.shape[0]
+    dt = x.dtype
+    q, k, v, log_i, log_f, z = _mlstm_proj(params, cfg, x)
+    q1, k1, v1 = (f32[:, :, 0] for f32 in
+                  (q.astype(jnp.float32), k.astype(jnp.float32),
+                   v.astype(jnp.float32)))                          # (B,H,dh)
+    li, lf = log_i[..., 0], log_f[..., 0]                           # (B,H)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    so = jnp.exp(lf + m - m_new)
+    si = jnp.exp(li - m_new)
+    C = so[..., None, None] * C + si[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k1, v1)
+    n = so[..., None] * n + si[..., None] * k1
+    num = jnp.einsum("bhd,bhde->bhe", q1, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n)), jnp.exp(-m_new))
+    h = (num / den[..., None])[:, :, None]                          # (B,H,1,dh)
+    h = _head_norm(h, params["gn_scale"], cfg.norm_eps)
+    h = h.transpose(0, 2, 1, 3).reshape(B, 1, -1)
+    out = h * jax.nn.silu(z.astype(jnp.float32))
+    y = jnp.einsum("bse,ed->bsd", out.astype(dt), params["wdown"].astype(dt))
+    return y, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    d, H, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ff = ((4 * d // 3) + 63) // 64 * 64
+    ks = jax.random.split(key, 7)
+    return {
+        "wg": dense_init(ks[0], d, (d, 4, H, dh), ("embed", "conv", "heads", "head_dim")),
+        "rg": dense_init(ks[1], dh, (4, H, dh, dh), ("conv", "heads", "head_dim", "head_dim")),
+        "bg": leaf(jnp.zeros((4, H, dh), jnp.float32), "conv", "heads", "head_dim"),
+        "gn_scale": leaf(jnp.ones((H, dh), jnp.float32), "heads", "head_dim"),
+        "up1": dense_init(ks[2], d, (d, ff), ("embed", "mlp")),
+        "up2": dense_init(ks[3], d, (d, ff), ("embed", "mlp")),
+        "down": dense_init(ks[4], ff, (ff, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_cell(params, cfg, carry, gx):
+    """carry: (c,n,h,m) each (B,H,dh); gx (B,4,H,dh) input preactivations."""
+    c, n, h, m = carry
+    rec = jnp.einsum("bhd,ghde->bghe", h, params["rg"])
+    pre = gx + rec + params["bg"][None]
+    i_p, f_p, z_p, o_p = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    log_f = jax.nn.log_sigmoid(f_p)
+    log_i = i_p
+    m_new = jnp.maximum(log_f + m, log_i)
+    c_new = jnp.exp(log_f + m - m_new) * c + jnp.exp(log_i - m_new) * jnp.tanh(z_p)
+    n_new = jnp.exp(log_f + m - m_new) * n + jnp.exp(log_i - m_new)
+    h_new = jax.nn.sigmoid(o_p) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def apply_slstm(params, cfg, x):
+    """x (B,S,d) -> (B,S,d); sequential scan over S (inherently serial)."""
+    B, S, d = x.shape
+    H, dh = cfg.num_heads, cfg.head_dim
+    dt = x.dtype
+    gx = jnp.einsum("bsd,dghe->sbghe", x.astype(jnp.float32), params["wg"])
+
+    def step(carry, g):
+        new = _slstm_cell(params, cfg, carry, g)
+        return new, new[2]
+
+    z0 = jnp.zeros((B, H, dh), jnp.float32)
+    init = (z0, z0, z0, jnp.full((B, H, dh), 0.0, jnp.float32))
+    _, hs = jax.lax.scan(step, init, gx)                            # (S,B,H,dh)
+    h = hs.transpose(1, 0, 2, 3)                                    # (B,S,H,dh)
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + cfg.norm_eps) * params["gn_scale"][None, None]
+    y = h.reshape(B, S, d).astype(dt)
+    # GLU post-MLP (xLSTM sLSTM block)
+    u = jnp.einsum("bsd,df->bsf", y, params["up1"].astype(dt))
+    g = jnp.einsum("bsd,df->bsf", y, params["up2"].astype(dt))
+    u = u * jax.nn.gelu(g.astype(jnp.float32)).astype(dt)
+    return jnp.einsum("bsf,fd->bsd", u, params["down"].astype(dt))
+
+
+def init_slstm_state(cfg, B):
+    H, dh = cfg.num_heads, cfg.head_dim
+    z = jnp.zeros((B, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def decode_slstm(params, cfg, state, x):
+    dt = x.dtype
+    gx = jnp.einsum("bd,dghe->bghe", x[:, 0].astype(jnp.float32), params["wg"])
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    c, n, h, m = _slstm_cell(params, cfg, carry, gx)
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    hn = h * jax.lax.rsqrt(var + cfg.norm_eps) * params["gn_scale"][None]
+    y = hn.reshape(x.shape[0], 1, -1).astype(dt)
+    u = jnp.einsum("bsd,df->bsf", y, params["up1"].astype(dt))
+    g = jnp.einsum("bsd,df->bsf", y, params["up2"].astype(dt))
+    u = u * jax.nn.gelu(g.astype(jnp.float32)).astype(dt)
+    out = jnp.einsum("bsf,fd->bsd", u, params["down"].astype(dt))
+    return out, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,1 @@
+from repro.optim.adamw import init_opt_state, adamw_update, lr_schedule

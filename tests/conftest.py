@@ -1,0 +1,8 @@
+# NOTE: deliberately NO XLA_FLAGS here — smoke tests and benchmarks must see
+# the single real CPU device.  Multi-device tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves (test_distributed.py,
+# test_dryrun_small.py).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

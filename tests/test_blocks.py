@@ -1,0 +1,114 @@
+"""Block-level numerics: chunkwise-parallel forms vs exact recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import attention, mamba, xlstm
+from repro.models.layers import is_leaf
+
+
+def strip(tree):
+    return jax.tree.map(lambda t: t[0], tree, is_leaf=is_leaf)
+
+
+def test_mamba_chunked_equals_recurrent():
+    cfg = smoke_config("jamba-v0.1-52b")
+    p = strip(mamba.init(jax.random.PRNGKey(2), cfg))
+    B, S = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, cfg.d_model)) * 0.5
+    y_c = mamba.apply(p, cfg, x, chunk=8)
+    st = mamba.init_state(cfg, B)
+    ys = []
+    for t in range(S):
+        y, st = mamba.decode_step(p, cfg, st, x[:, t:t + 1])
+        ys.append(y)
+    y_n = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_n),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+def test_mlstm_chunk_invariance(chunk):
+    cfg = smoke_config("xlstm-1.3b")
+    p = strip(xlstm.init_mlstm(jax.random.PRNGKey(0), cfg))
+    B, S = 2, 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+    y_ref = xlstm.apply_mlstm(p, cfg, x, chunk=S)  # single chunk = parallel form
+    y = xlstm.apply_mlstm(p, cfg, x, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_mlstm_chunked_equals_decode():
+    cfg = smoke_config("xlstm-1.3b")
+    p = strip(xlstm.init_mlstm(jax.random.PRNGKey(0), cfg))
+    B, S = 2, 48
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+    y_c = xlstm.apply_mlstm(p, cfg, x, chunk=16)
+    st = xlstm.init_mlstm_state(cfg, B)
+    ys = []
+    for t in range(S):
+        y, st = xlstm.decode_mlstm(p, cfg, st, x[:, t:t + 1])
+        ys.append(y)
+    y_n = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_n),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_slstm_scan_equals_decode():
+    cfg = smoke_config("xlstm-1.3b")
+    p = strip(xlstm.init_slstm(jax.random.PRNGKey(4), cfg))
+    B, S = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, S, cfg.d_model)) * 0.5
+    y_s = xlstm.apply_slstm(p, cfg, x)
+    st = xlstm.init_slstm_state(cfg, B)
+    ys = []
+    for t in range(S):
+        y, st = xlstm.decode_slstm(p, cfg, st, x[:, t:t + 1])
+        ys.append(y)
+    y_n = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_n),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_chunked_attention_matches_dense():
+    cfg = smoke_config("llama3-8b").replace(dtype="float32")
+    B, S, H, K, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, K, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, K, hd))
+    out = attention.chunked_attention(q, k, v, cfg, causal=True, chunk=16)
+    # dense reference
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k) * hd ** -0.5
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ref = jnp.einsum("bkgqc,bckh->bkgqh", p, v).transpose(0, 3, 1, 2, 4) \
+        .reshape(B, S, H, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_chunked_attention_sliding_window():
+    cfg = smoke_config("h2o-danube-1.8b").replace(dtype="float32",
+                                                  sliding_window=24)
+    B, S, H, K, hd = 1, 64, 4, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, K, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, K, hd))
+    out = attention.chunked_attention(q, k, v, cfg, causal=True, chunk=16)
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k) * hd ** -0.5
+    i, j = jnp.meshgrid(jnp.arange(S), jnp.arange(S), indexing="ij")
+    mask = (i >= j) & (i - j < 24)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ref = jnp.einsum("bkgqc,bckh->bkgqh", p, v).transpose(0, 3, 1, 2, 4) \
+        .reshape(B, S, H, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)

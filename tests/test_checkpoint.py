@@ -1,0 +1,63 @@
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (16, 8)),
+            "b": {"c": jnp.arange(10, dtype=jnp.int32),
+                  "d": jnp.float32(3.5)}}
+
+
+def test_roundtrip_bitexact(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    t = tree()
+    ck.save(7, t)
+    assert ck.latest_step() == 7
+    got = ck.restore(7, jax.eval_shape(lambda: tree()))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_then_restore(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=True)
+    ck.save(1, tree(1))
+    ck.wait()
+    got = ck.restore(1, jax.eval_shape(lambda: tree(1)))
+    np.testing.assert_array_equal(np.asarray(got["a"]),
+                                  np.asarray(tree(1)["a"]))
+
+
+def test_corruption_detected(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(3, tree())
+    d = tmp_path / "step_00000003"
+    manifest = json.loads((d / "manifest.json").read_text())
+    name = next(k for k, v in manifest["arrays"].items()
+                if v["shape"] == [16, 8])
+    fn = manifest["arrays"][name]["file"]
+    arr = np.load(d / fn)
+    arr[0, 0] += 1
+    np.save(d / fn, arr)
+    with pytest.raises(IOError, match="corruption"):
+        ck.restore(3, jax.eval_shape(lambda: tree()))
+
+
+def test_gc_keeps_last_three(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    for s in range(5):
+        ck.save(s, {"x": jnp.zeros(3)})
+    assert sorted(ck.all_steps()) == [2, 3, 4]
+
+
+def test_atomicity_no_partial_dir(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(1, tree())
+    assert not list(tmp_path.glob("tmp.*"))

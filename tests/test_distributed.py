@@ -1,0 +1,126 @@
+"""Multi-device parity tests.  Each test runs in a SUBPROCESS with
+--xla_force_host_platform_device_count=8 so the main pytest process keeps
+the single real CPU device (assignment requirement)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 480):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_channel_parallel_probe_matches_single():
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs.base import HashMemConfig
+        from repro.core import hashmap, rlu
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        cfg = HashMemConfig(num_buckets=32, slots_per_page=128,
+                            overflow_pages=64, max_chain=4, backend="perf")
+        rng = np.random.default_rng(2)
+        keys = rng.choice(2**31, size=2000, replace=False).astype(np.uint32)
+        vals = rng.integers(0, 2**31, size=2000).astype(np.uint32)
+        hm_stacked = rlu.build_sharded(cfg, jnp.asarray(keys),
+                                       jnp.asarray(vals), num_shards=4)
+        q = np.concatenate([keys[:256],
+                            (keys[:256].astype(np.uint64)+2**31).astype(np.uint32)])
+        with mesh:
+            v, f = rlu.probe_sharded(mesh, hm_stacked, jnp.asarray(q), cfg)
+        v, f = np.asarray(v), np.asarray(f)
+        assert f[:256].all() and (v[:256] == vals[:256]).all()
+        assert not f[256:].any()
+        # single-device reference
+        hm = hashmap.build(cfg._replace(backend="ref") if hasattr(cfg, "_replace")
+                           else cfg, jnp.asarray(keys), jnp.asarray(vals))
+        v1, f1 = hashmap.probe(hm, jnp.asarray(q), backend="ref")
+        assert (np.asarray(f1) == f).all()
+        assert (np.asarray(v1)[f] == v[f]).all()
+        print("OK")
+        """)
+
+
+def test_sharded_train_step_matches_single_device():
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import smoke_config
+        from repro.configs.base import OptimConfig, ShapeConfig
+        from repro.data import SyntheticLMData
+        from repro.distributed import steps as dsteps
+        from repro.launch.mesh import make_mesh
+        cfg = smoke_config("llama3-8b").replace(dtype="float32")
+        oc = OptimConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        shape = ShapeConfig("t", 64, 8, "train")
+        data = SyntheticLMData(cfg, shape, seed=0)
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+
+        losses = {}
+        for dims in [(1, 1), (2, 4), (4, 2)]:
+            mesh = make_mesh(dims, ("data", "model"))
+            _, jitted, pshard, oshard = dsteps.build_train_step(
+                cfg, oc, mesh, seq_shard=True)
+            params, opt = dsteps.init_train_state(cfg, oc, mesh,
+                                                  jax.random.PRNGKey(0))
+            p2, o2, m = jitted(batch)(params, opt, batch)
+            losses[dims] = float(m["loss"])
+        base = losses[(1, 1)]
+        for dims, l in losses.items():
+            assert abs(l - base) < 5e-4, (dims, l, base)
+        print("OK", losses)
+        """)
+
+
+def test_multipod_mesh_train_step():
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import smoke_config
+        from repro.configs.base import OptimConfig, ShapeConfig
+        from repro.data import SyntheticLMData
+        from repro.distributed import steps as dsteps
+        from repro.launch.mesh import make_mesh
+        cfg = smoke_config("olmoe-1b-7b").replace(dtype="float32")
+        oc = OptimConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        shape = ShapeConfig("t", 64, 8, "train")
+        batch = {k: jnp.asarray(v) for k, v in
+                 SyntheticLMData(cfg, shape, seed=0).batch_at(0).items()}
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        _, jitted, _, _ = dsteps.build_train_step(cfg, oc, mesh)
+        params, opt = dsteps.init_train_state(cfg, oc, mesh,
+                                              jax.random.PRNGKey(0))
+        p2, o2, m = jitted(batch)(params, opt, batch)
+        assert np.isfinite(float(m["loss"]))
+        print("OK", float(m["loss"]))
+        """)
+
+
+def test_channel_parallel_serve_matches_single():
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import smoke_config
+        from repro.launch.mesh import make_mesh
+        from repro.launch.serve import serve
+        cfg = smoke_config("llama3-8b").replace(dtype="float32")
+        done1, _, _ = serve(cfg, make_mesh((1, 1), ("data", "model")),
+                            batch=2, requests=3, max_new=4, horizon=64,
+                            page_tokens=16, verbose=False, seed=1)
+        done8, _, _ = serve(cfg, make_mesh((2, 4), ("data", "model")),
+                            batch=2, requests=3, max_new=4, horizon=64,
+                            page_tokens=16, verbose=False, seed=1)
+        a = {r["id"]: r["out"] for r in done1}
+        b = {r["id"]: r["out"] for r in done8}
+        assert a == b, (a, b)
+        print("OK")
+        """)

@@ -1,0 +1,56 @@
+"""Dry-run machinery test on a reduced (2,2[,2]) mesh in a subprocess —
+exercises the exact lower_cell/analyze path used for the production grid."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def run_dryrun(arch, shape, mesh_kind, probe, tmp_path, timeout=540):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["REPRO_HOST_DEVICES"] = "8"
+    env["REPRO_MESH"] = "2,2"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh_kind, "--probe", probe,
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=timeout)
+    name = f"{arch}__{shape}__{mesh_kind}__{probe}.json"
+    rec = json.loads((tmp_path / name).read_text())
+    assert r.returncode == 0, \
+        f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    return rec
+
+
+def test_train_cell_lowers_and_reports(tmp_path):
+    rec = run_dryrun("h2o-danube-1.8b", "train_4k", "single", "full", tmp_path)
+    assert rec["ok"]
+    assert rec["flops_per_device"] > 0
+    assert rec["collectives"]["total_bytes"] > 0
+    assert "temp_size_in_bytes" in rec
+
+
+def test_decode_cell_lowers(tmp_path):
+    rec = run_dryrun("h2o-danube-1.8b", "decode_32k", "single", "full",
+                     tmp_path)
+    assert rec["ok"]
+    assert rec["n_pages"] >= 1
+
+
+def test_multipod_cell_lowers(tmp_path):
+    rec = run_dryrun("xlstm-1.3b", "train_4k", "multi", "full", tmp_path)
+    assert rec["ok"]
+    assert rec["mesh"] == {"pod": 2, "data": 2, "model": 2}
+
+
+def test_probe_extrapolation_consistent(tmp_path):
+    """unit2 flops > unit1 flops (the per-layer delta is positive)."""
+    r1 = run_dryrun("h2o-danube-1.8b", "train_4k", "single", "unit1", tmp_path)
+    r2 = run_dryrun("h2o-danube-1.8b", "train_4k", "single", "unit2", tmp_path)
+    assert r1["ok"] and r2["ok"]
+    assert r2["flops_per_device"] > r1["flops_per_device"] * 1.05

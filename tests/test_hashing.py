@@ -1,0 +1,39 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hashing
+
+
+def test_fmix_determinism_and_range():
+    keys = jnp.arange(10_000, dtype=jnp.uint32)
+    h1 = hashing.murmur3_fmix(keys)
+    h2 = hashing.murmur3_fmix(keys)
+    assert h1.dtype == jnp.uint32
+    assert bool(jnp.all(h1 == h2))
+
+
+def test_fmix_avalanche():
+    """Flipping one input bit flips ~half the output bits."""
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2**31, 2048).astype(np.uint32)
+    h0 = np.asarray(hashing.murmur3_fmix(jnp.asarray(keys)))
+    flipped = keys ^ np.uint32(1 << 7)
+    h1 = np.asarray(hashing.murmur3_fmix(jnp.asarray(flipped)))
+    diff = np.unpackbits((h0 ^ h1).view(np.uint8)).mean() * 32
+    assert 12 < diff < 20  # ideal 16
+
+
+@pytest.mark.parametrize("fn", list(hashing.HASH_FNS))
+def test_bucket_range(fn):
+    keys = jnp.arange(5000, dtype=jnp.uint32) * jnp.uint32(2654435761)
+    b = hashing.hash_to_bucket(keys, 127, fn)
+    assert int(b.min()) >= 0 and int(b.max()) < 127
+
+
+def test_bucket_balance_murmur():
+    """Murmur buckets are near-uniform (paper §6 'Hash Function' goal)."""
+    keys = jnp.arange(100_000, dtype=jnp.uint32)
+    b = np.asarray(hashing.hash_to_bucket(keys, 256))
+    counts = np.bincount(b, minlength=256)
+    assert counts.std() / counts.mean() < 0.12

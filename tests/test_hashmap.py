@@ -1,0 +1,145 @@
+"""Property-based tests of the HashMem structure invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import HashMemConfig
+from repro.core import hashmap
+from repro.core.hashing import EMPTY_KEY, TOMBSTONE_KEY
+
+CFG = HashMemConfig(num_buckets=16, slots_per_page=32, overflow_pages=96,
+                    max_chain=6, backend="ref")
+
+keys_strategy = st.lists(
+    st.integers(min_value=0, max_value=2**31 - 1),
+    min_size=1, max_size=300, unique=True)
+
+
+@settings(max_examples=25, deadline=None)
+@given(keys=keys_strategy, salt=st.integers(0, 2**31))
+def test_build_probe_roundtrip(keys, salt):
+    keys = np.asarray(keys, np.uint32)
+    vals = (keys * np.uint32(2654435761)) ^ np.uint32(salt)
+    hm = hashmap.build(CFG, jnp.asarray(keys), jnp.asarray(vals))
+    v, f = hashmap.probe(hm, jnp.asarray(keys))
+    assert bool(jnp.all(f))
+    assert bool(jnp.all(v == jnp.asarray(vals)))
+    # keys not inserted are not found
+    miss = keys.astype(np.uint64) + 2**31
+    miss = miss[miss < 0xFFFFFFF0].astype(np.uint32)
+    miss = np.setdiff1d(miss, keys)
+    if miss.size:
+        v2, f2 = hashmap.probe(hm, jnp.asarray(miss))
+        assert not bool(jnp.any(f2))
+
+
+@settings(max_examples=15, deadline=None)
+@given(keys=keys_strategy, n_del=st.integers(0, 50))
+def test_delete_semantics(keys, n_del):
+    keys = np.asarray(keys, np.uint32)
+    vals = keys + np.uint32(1)
+    hm = hashmap.build(CFG, jnp.asarray(keys), jnp.asarray(vals))
+    dels = keys[:min(n_del, len(keys))]
+    hm, found = hashmap.delete(hm, jnp.asarray(dels))
+    assert bool(jnp.all(found)) or dels.size == 0
+    if dels.size:
+        _, f = hashmap.probe(hm, jnp.asarray(dels))
+        assert not bool(jnp.any(f))
+    rest = keys[min(n_del, len(keys)):]
+    if rest.size:
+        v, f = hashmap.probe(hm, jnp.asarray(rest))
+        assert bool(jnp.all(f)) and bool(jnp.all(v == jnp.asarray(rest + 1)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(keys=keys_strategy)
+def test_chain_structure_invariants(keys, ):
+    keys = np.asarray(keys, np.uint32)
+    hm = hashmap.build(CFG, jnp.asarray(keys), jnp.asarray(keys))
+    nxt = np.asarray(hm.page_next)
+    fill = np.asarray(hm.page_fill)
+    # acyclic chains, depth bounded
+    for b in range(CFG.num_buckets):
+        seen = set()
+        p = int(np.asarray(hm.bucket_head)[b])
+        while p >= 0:
+            assert p not in seen, "cycle in page chain"
+            seen.add(p)
+            p = int(nxt[p])
+        assert len(seen) <= CFG.max_chain
+    # live entries == inserted count
+    st_ = hashmap.stats(hm)
+    assert st_["live_entries"] == len(keys)
+    # fill counts match non-empty slots
+    kp = np.asarray(hm.key_pages)
+    for page in range(CFG.num_pages):
+        used = int((kp[page] != np.uint32(0xFFFFFFFF)).sum())
+        assert used == fill[page]
+
+
+def test_adversarial_single_bucket():
+    """All keys forced into one bucket (identity hash, same residue):
+    the paper's over-utilized bucket case -> overflow chain."""
+    cfg = HashMemConfig(num_buckets=4, slots_per_page=32, overflow_pages=16,
+                        max_chain=6, hash_fn="identity", backend="ref")
+    keys = (np.arange(100, dtype=np.uint32) * 4 + 1)  # all bucket 1
+    hm = hashmap.build(cfg, jnp.asarray(keys), jnp.asarray(keys * 7))
+    st_ = hashmap.stats(hm)
+    assert st_["max_chain"] == 4  # ceil(100/32)
+    v, f = hashmap.probe(hm, jnp.asarray(keys))
+    assert bool(jnp.all(f)) and bool(jnp.all(v == jnp.asarray(keys * 7)))
+
+
+def test_insert_overflow_allocates_pages():
+    cfg = HashMemConfig(num_buckets=2, slots_per_page=32, overflow_pages=8,
+                        max_chain=4, hash_fn="identity", backend="ref")
+    hm = hashmap.create(cfg)
+    keys = np.arange(0, 120, 2, dtype=np.uint32)  # bucket 0 only
+    hm, ok = hashmap.insert(hm, jnp.asarray(keys), jnp.asarray(keys))
+    assert bool(jnp.all(ok))
+    assert int(hm.free_top) == 2 + 1  # one overflow page allocated (60 keys)
+    v, f = hashmap.probe(hm, jnp.asarray(keys))
+    assert bool(jnp.all(f))
+
+
+def test_insert_arena_exhaustion_returns_error():
+    cfg = HashMemConfig(num_buckets=1, slots_per_page=32, overflow_pages=1,
+                        max_chain=8, hash_fn="identity", backend="ref")
+    hm = hashmap.create(cfg)
+    keys = np.arange(100, dtype=np.uint32)
+    hm, ok = hashmap.insert(hm, jnp.asarray(keys), jnp.asarray(keys))
+    ok = np.asarray(ok)
+    assert ok[:64].all()          # 2 pages x 32 slots
+    assert not ok[64:].any()      # pim_malloc PR_ERROR past capacity
+
+
+def test_tombstones_not_reused():
+    """Paper §2.5: deletion wastes space; inserts append at the chain tail."""
+    cfg = HashMemConfig(num_buckets=1, slots_per_page=32, overflow_pages=4,
+                        max_chain=4, hash_fn="identity", backend="ref")
+    hm = hashmap.create(cfg)
+    k1 = np.arange(10, dtype=np.uint32)
+    hm, _ = hashmap.insert(hm, jnp.asarray(k1), jnp.asarray(k1))
+    hm, _ = hashmap.delete(hm, jnp.asarray(k1[:5]))
+    assert hashmap.stats(hm)["tombstones"] == 5
+    k2 = np.arange(100, 105, dtype=np.uint32)
+    hm, ok = hashmap.insert(hm, jnp.asarray(k2), jnp.asarray(k2))
+    assert bool(jnp.all(ok))
+    assert hashmap.stats(hm)["tombstones"] == 5  # not reclaimed
+    v, f = hashmap.probe(hm, jnp.asarray(k2))
+    assert bool(jnp.all(f))
+
+
+@pytest.mark.parametrize("backend", ["ref", "perf", "area", "bitserial"])
+def test_backends_agree(backend):
+    cfg = HashMemConfig(num_buckets=8, slots_per_page=128, overflow_pages=32,
+                        max_chain=5, backend=backend)
+    rng = np.random.default_rng(7)
+    keys = rng.choice(2**31, 2000, replace=False).astype(np.uint32)
+    vals = rng.integers(0, 2**31, 2000).astype(np.uint32)
+    hm = hashmap.build(cfg, jnp.asarray(keys), jnp.asarray(vals))
+    q = np.concatenate([keys[:200], (keys[:100] + np.uint32(2**31))])
+    v, f = hashmap.probe(hm, jnp.asarray(q))
+    assert bool(jnp.all(f[:200])) and not bool(jnp.any(f[200:]))
+    assert bool(jnp.all(v[:200] == jnp.asarray(vals[:200])))

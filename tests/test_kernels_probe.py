@@ -1,0 +1,138 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs the pure-jnp
+oracle (kernels/ref.py) on identical page pools, including missing keys,
+tombstones and chain padding."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import layout
+from repro.core.hashing import EMPTY_KEY, TOMBSTONE_KEY
+from repro.kernels import ref
+from repro.kernels.probe_area import probe_pages_area
+from repro.kernels.probe_bitserial import probe_pages_bitserial
+from repro.kernels.probe_perf import probe_pages_perf
+
+
+def make_pool(rng, P, S, key_bits=32, fill=0.7, tombstones=0.05):
+    max_key = min(2**key_bits - 2, 0xFFFFFFF0)
+    kp = np.full((P, S), 0xFFFFFFFF, np.uint32)
+    vp = np.zeros((P, S), np.uint32)
+    n = int(P * S * fill)
+    if n <= max_key:
+        keys = rng.choice(max_key, size=n, replace=False).astype(np.uint32)
+        vals = rng.integers(0, 2**31, n).astype(np.uint32)
+    else:
+        # tiny key spaces (4/8-bit): duplicates allowed; value = f(key) so
+        # first-match semantics yield identical values for any copy
+        keys = rng.integers(0, max_key, n).astype(np.uint32)
+        vals = (keys * np.uint32(2654435761)) >> np.uint32(3)
+    pos = rng.choice(P * S, size=n, replace=False)
+    kp.reshape(-1)[pos] = keys
+    vp.reshape(-1)[pos] = vals
+    # tombstones
+    tpos = rng.choice(pos, size=int(n * tombstones), replace=False)
+    kp.reshape(-1)[tpos] = 0xFFFFFFFE
+    live = np.setdiff1d(pos, tpos)
+    return kp, vp, live
+
+
+def make_queries(rng, kp, vp, live, Q, C, P, key_bits=32):
+    flat_k = kp.reshape(-1)
+    hit = rng.choice(live, size=Q // 2)
+    hit_keys = flat_k[hit]
+    hit_pages = (hit // kp.shape[1]).astype(np.int32)
+    max_key = min(2**key_bits - 2, 0xFFFFFFF0)
+    missing = rng.choice(max_key, size=Q - Q // 2).astype(np.uint32)
+    missing = np.where(np.isin(missing, flat_k),
+                       np.uint32(max_key - 1), missing)
+    queries = np.concatenate([hit_keys, missing])
+    pages = np.full((Q, C), -1, np.int32)
+    for i in range(Q // 2):
+        pages[i, rng.integers(0, C)] = hit_pages[i]
+        extra = rng.integers(0, P, C)
+        m = rng.random(C) < 0.4
+        pages[i] = np.where((pages[i] < 0) & m, extra, pages[i])
+    for i in range(Q // 2, Q):
+        pages[i] = rng.integers(0, P, C)
+    return queries.astype(np.uint32), pages
+
+
+@pytest.mark.parametrize("P,S,Q,C", [
+    (16, 128, 32, 1),
+    (32, 256, 64, 4),
+    (8, 512, 16, 2),
+    (64, 128, 128, 3),
+])
+@pytest.mark.parametrize("kernel", ["perf", "area", "bitserial"])
+def test_kernel_vs_oracle(P, S, Q, C, kernel):
+    rng = np.random.default_rng(P * 1000 + S + Q + C)
+    kp, vp, live = make_pool(rng, P, S)
+    q, pages = make_queries(rng, kp, vp, live, Q, C, P)
+    kpj, vpj = jnp.asarray(kp), jnp.asarray(vp)
+    qj, pj = jnp.asarray(q), jnp.asarray(pages)
+    want_v, want_f = ref.probe_pages_ref(kpj, vpj, qj, pj)
+    if kernel == "perf":
+        got_v, got_f = probe_pages_perf(kpj, vpj, qj, pj, interpret=True)
+    elif kernel == "area":
+        got_v, got_f = probe_pages_area(kpj, vpj, qj, pj, interpret=True)
+    else:
+        planes = layout.pack_bitplanes(kpj, 32)
+        got_v, got_f = probe_pages_bitserial(planes, vpj, qj, pj, 32,
+                                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+
+
+@pytest.mark.parametrize("key_bits", [4, 8, 16, 32])
+def test_bitserial_key_widths(key_bits):
+    """Paper column widths: 4/8/16-bit keys take key_bits bit-plane steps."""
+    rng = np.random.default_rng(key_bits)
+    P, S, Q, C = 8, 128, 32, 2
+    kp, vp, live = make_pool(rng, P, S, key_bits=key_bits, fill=0.4)
+    q, pages = make_queries(rng, kp, vp, live, Q, C, P, key_bits=key_bits)
+    kpj, vpj = jnp.asarray(kp), jnp.asarray(vp)
+    qj, pj = jnp.asarray(q), jnp.asarray(pages)
+    want_v, want_f = ref.probe_pages_ref(kpj, vpj, qj, pj)
+    planes = layout.pack_bitplanes(kpj, key_bits)
+    got_v, got_f = probe_pages_bitserial(planes, vpj, qj, pj, key_bits,
+                                         interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+
+
+def test_bitplane_pack_roundtrip():
+    rng = np.random.default_rng(0)
+    kp = rng.integers(0, 2**32 - 1, (8, 256), dtype=np.uint64).astype(np.uint32)
+    planes = layout.pack_bitplanes(jnp.asarray(kp), 32)
+    back = layout.unpack_bitplanes(planes, 32)
+    np.testing.assert_array_equal(np.asarray(back), kp)
+
+
+def test_bitplanes_ref_matches_keys_ref():
+    rng = np.random.default_rng(1)
+    kp, vp, live = make_pool(rng, 16, 128)
+    q, pages = make_queries(rng, kp, vp, live, 64, 3, 16)
+    kpj, vpj, qj, pj = map(jnp.asarray, (kp, vp, q, pages))
+    planes = layout.pack_bitplanes(kpj, 32)
+    v1, f1 = ref.probe_pages_ref(kpj, vpj, qj, pj)
+    v2, f2 = ref.probe_bitplanes_ref(planes, vpj, qj, pj, 32)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_first_match_chain_order():
+    """Duplicate key on two pages in the chain: first page wins."""
+    kp = np.full((4, 128), 0xFFFFFFFF, np.uint32)
+    vp = np.zeros((4, 128), np.uint32)
+    kp[1, 5] = 42; vp[1, 5] = 111
+    kp[3, 77] = 42; vp[3, 77] = 222
+    q = jnp.asarray([42], jnp.uint32)
+    pages = jnp.asarray([[1, 3]], jnp.int32)
+    for fn in (ref.probe_pages_ref,
+               lambda *a: probe_pages_perf(*a, interpret=True),
+               lambda *a: probe_pages_area(*a, interpret=True)):
+        v, f = fn(jnp.asarray(kp), jnp.asarray(vp), q, pages)
+        assert bool(f[0]) and int(v[0]) == 111
+    pages2 = jnp.asarray([[3, 1]], jnp.int32)
+    v, f = ref.probe_pages_ref(jnp.asarray(kp), jnp.asarray(vp), q, pages2)
+    assert int(v[0]) == 222

@@ -1,0 +1,64 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OptimConfig
+from repro.optim import adamw_update, init_opt_state, lr_schedule
+
+
+def test_schedule_shape():
+    oc = OptimConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(oc, jnp.int32(s))) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 1e-3) < 1e-9          # peak at end of warmup
+    assert lrs[-1] < lrs[1]                   # decays
+    assert lrs[-1] >= 0.1 * 1e-3 - 1e-9       # floor 10%
+
+
+def test_adamw_converges_quadratic():
+    oc = OptimConfig(lr=0.05, warmup_steps=5, total_steps=200,
+                     weight_decay=0.0, grad_clip=1.0)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = init_opt_state(params, oc)
+    for _ in range(200):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(params, g, state, oc)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_bf16_states_still_converge():
+    oc = OptimConfig(lr=0.05, warmup_steps=5, total_steps=200,
+                     weight_decay=0.0, state_dtype="bfloat16")
+    target = jnp.asarray([0.5, -1.5])
+    params = {"w": jnp.zeros(2)}
+    state = init_opt_state(params, oc)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    for _ in range(200):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(params, g, state, oc)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.1)
+
+
+def test_grad_clip_caps_update():
+    oc = OptimConfig(lr=1.0, warmup_steps=0, total_steps=10, grad_clip=1e-3,
+                     weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = init_opt_state(params, oc)
+    g = {"w": jnp.full(4, 1e6)}
+    _, _, stats = adamw_update(params, g, state, oc)
+    assert float(stats["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_no_decay_on_norm_scales():
+    oc = OptimConfig(lr=0.1, warmup_steps=0, total_steps=10,
+                     weight_decay=1.0)
+    params = {"ffn": {"w": jnp.ones(4)}, "norm1": {"scale": jnp.ones(4)}}
+    state = init_opt_state(params, oc)
+    g = jax.tree.map(jnp.zeros_like, params)
+    p2, _, _ = adamw_update(params, g, state, oc)
+    assert float(jnp.max(jnp.abs(p2["norm1"]["scale"] - 1.0))) < 1e-6
+    assert float(jnp.max(jnp.abs(p2["ffn"]["w"] - 1.0))) > 1e-3  # decayed

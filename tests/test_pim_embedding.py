@@ -1,0 +1,48 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pim_embedding import DictionaryVocab, init_qr, qr_embedding
+
+
+def test_dictionary_vocab_roundtrip():
+    rng = np.random.default_rng(0)
+    keys = rng.choice(2**31, 5000, replace=False).astype(np.uint32)
+    vocab = DictionaryVocab(keys)
+    rows, found = vocab.encode(jnp.asarray(keys[:512]))
+    assert bool(jnp.all(found))
+    assert bool(jnp.all(rows == jnp.arange(512)))
+
+
+def test_oov_maps_to_last_row():
+    rng = np.random.default_rng(1)
+    keys = rng.choice(2**30, 1000, replace=False).astype(np.uint32)
+    vocab = DictionaryVocab(keys)
+    unknown = (keys[:64].astype(np.uint64) + 2**30).astype(np.uint32)
+    rows, found = vocab.encode(jnp.asarray(unknown))
+    assert not bool(jnp.any(found))
+    assert bool(jnp.all(rows == vocab.size))
+    table = jnp.asarray(np.arange((vocab.size + 1) * 4, dtype=np.float32)
+                        .reshape(vocab.size + 1, 4))
+    emb = vocab.lookup(table, jnp.asarray(unknown))
+    np.testing.assert_array_equal(np.asarray(emb[0]), np.asarray(table[-1]))
+
+
+@pytest.mark.parametrize("backend", ["ref", "perf"])
+def test_vocab_kernel_backend(backend):
+    rng = np.random.default_rng(2)
+    keys = rng.choice(2**31, 2000, replace=False).astype(np.uint32)
+    vocab = DictionaryVocab(keys)
+    rows, found = vocab.encode(jnp.asarray(keys[100:200]), backend=backend)
+    assert bool(jnp.all(found))
+    assert bool(jnp.all(rows == jnp.arange(100, 200)))
+
+
+def test_qr_embedding_shapes_and_determinism():
+    params = init_qr(jax.random.PRNGKey(0), num_rows=1_000_000, d=16, r_r=512)
+    ids = jnp.asarray([3, 999_999, 3, 12345], jnp.uint32)
+    out = qr_embedding(params, ids, 1_000_000)
+    assert out.shape == (4, 16)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[2]))
+    assert not np.allclose(np.asarray(out[0]), np.asarray(out[1]))

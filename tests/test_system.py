@@ -1,0 +1,43 @@
+"""End-to-end system behaviour: the paper's full pipeline in miniature —
+build a HashMem, probe it through every backend, serve a model whose KV
+page table is that HashMem, and train the same model family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.configs.base import HashMemConfig
+from repro.core import hashmap
+from repro.data.kv_synth import kv_dataset, probe_set
+
+
+def test_paper_microbenchmark_miniature():
+    """Paper §4.1.1 scaled: N pairs, 10% random probes, all found."""
+    n = 50_000
+    keys, vals = kv_dataset(n, seed=0)
+    cfg = HashMemConfig(num_buckets=1 << 8, slots_per_page=512,
+                        overflow_pages=1 << 7, max_chain=4, backend="ref")
+    chk = hashmap.build_check(cfg, keys)
+    assert chk["fits"], chk
+    hm = hashmap.build(cfg, jnp.asarray(keys), jnp.asarray(vals))
+    q, idx = probe_set(keys, 0.1)
+    v, f = hashmap.probe(hm, jnp.asarray(q))
+    assert bool(jnp.all(f))
+    np.testing.assert_array_equal(np.asarray(v), vals[idx])
+
+
+def test_full_stack_train_then_serve(tmp_path):
+    from repro.configs.base import OptimConfig, ShapeConfig
+    from repro.launch.mesh import make_mesh
+    from repro.launch.serve import serve
+    from repro.launch.train import train
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = smoke_config("h2o-danube-1.8b")
+    oc = OptimConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    shape = ShapeConfig("t", 64, 2, "train")
+    train(cfg, shape, oc, mesh, num_steps=10, ckpt_dir=str(tmp_path),
+          ckpt_every=0, verbose=False)
+    done, mgr, _ = serve(cfg, mesh, batch=2, requests=3, max_new=3,
+                         horizon=64, page_tokens=16, verbose=False)
+    assert len(done) == 3 and mgr.live_pages() == 0
