@@ -1,0 +1,15 @@
+# Tier-1 verify (ROADMAP.md) — run verbatim.
+PYTHON ?= python
+
+.PHONY: test test-slow bench-kernels
+
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) -m pytest -x -q
+
+# includes the slow-marked differential sweeps (500-schedule acceptance run
+# and the >1k-op mutation schedules)
+test-slow:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) -m pytest -x -q --runslow
+
+bench-kernels:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) benchmarks/kernel_bench.py

@@ -241,6 +241,14 @@ class HashMemConfig:
     backend: str = "perf"            # ref | area | perf | bitserial
     max_chain: int = 8               # static probe chain bound (RLU command depth)
 
+    # --- online mutation engine (grow/compact; hashmap.py docstring) ---
+    auto_grow: bool = True           # arena exhaustion triggers resize instead
+                                     # of dropped writes (insert_auto)
+    growth_factor: int = 2           # buckets/overflow scale per grow()
+    max_load_factor: float = 0.85    # proactive-grow threshold (live / slots)
+    compact_tombstone_frac: float = 0.25  # compact() when tombstones exceed
+                                          # this fraction of total slots
+
     @property
     def num_pages(self) -> int:
         return self.num_buckets + self.overflow_pages

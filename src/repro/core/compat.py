@@ -1,0 +1,43 @@
+"""jax version-compat shims.
+
+The repo targets the current jax API surface; older releases (0.4.x) spell
+some of it differently.  Centralizing the fallbacks here keeps call sites on
+the modern spelling:
+
+  * ``shard_map`` — new jax exposes ``jax.shard_map`` with ``check_vma``;
+    0.4.x has ``jax.experimental.shard_map.shard_map`` with ``check_rep``.
+  * mesh construction with axis_types lives in ``repro.launch.mesh``.
+"""
+from __future__ import annotations
+
+import jax
+
+# Newer jax defaults to partitionable threefry, making jax.random output
+# independent of the output sharding — the repo's distributed parity code
+# (same init on every mesh) assumes it.  0.4.x still defaults to False,
+# where jitted sharded init draws DIFFERENT values per mesh shape; adopt the
+# modern behavior unless the user pinned the flag themselves (env var or an
+# explicit jax.config.update before importing repro).
+import os as _os
+
+if (not jax.config.jax_threefry_partitionable
+        and "JAX_THREEFRY_PARTITIONABLE" not in _os.environ):
+    jax.config.update("jax_threefry_partitionable", True)
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(name):
+        # psum of 1 over the axis == its size; constant-folded by XLA
+        return jax.lax.psum(1, name)
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma,
+                                 **kw)

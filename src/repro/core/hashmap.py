@@ -14,12 +14,42 @@ Semantics mirror the paper exactly:
 
 Everything is a JAX pytree and jit/vmap/pjit-compatible; the structure is
 immutable — every mutation returns a new HashMem.
+
+Mutation & resizing semantics
+-----------------------------
+The online mutation engine extends the paper's populate-once model:
+
+  * ``insert`` is VECTORIZED: the whole batch is resolved with the same
+    sort/rank/segment machinery as ``build_with_buckets`` and appended to the
+    existing chain tails in one shot.  Within a batch it is equivalent to
+    repeated single inserts in batch order (stable sort keeps intra-bucket
+    batch order; duplicates are all stored, probe returns the oldest).  The
+    original sequential version is kept as ``insert_scan`` (reference
+    semantics + benchmark baseline).
+  * ``ok=False`` now means the element was NOT stored because pim_malloc
+    failed — either the overflow arena is exhausted or appending would push
+    the bucket's chain past ``config.max_chain`` (the RLU command-depth
+    bound).  The scan version silently exceeded the chain bound, making keys
+    unfindable; the vectorized engine refuses instead so callers can grow.
+  * ``grow(hm)`` rebuilds into a larger arena (``growth_factor`` x buckets
+    and overflow pages), re-bucketing every live entry, rebuilding chains and
+    (for the bitserial backend) the bit-planes from scratch.  ``compact(hm)``
+    is the same rebuild at the current size: it reclaims all tombstoned slots
+    and overflow pages (the paper's "wasted space", §2.5).  Both preserve
+    relative chain order of same-key duplicates, so probe/delete semantics
+    are unchanged across resizes.  Both are jit-compatible for a fixed
+    (old config, new config) pair — shapes are static per config.
+  * ``insert_auto`` is the HOST-level policy loop (not jit-compatible:
+    growth changes array shapes): it grows proactively when the batch would
+    push the load factor past ``config.max_load_factor`` and reactively while
+    any element reports ok=False, up to ``max_grows`` doublings.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +60,10 @@ from repro.core.hashing import EMPTY_KEY, TOMBSTONE_KEY, hash_to_bucket
 
 I32 = jnp.int32
 U32 = jnp.uint32
+
+# bucket_fn(keys (N,) u32, cfg) -> (N,) i32 bucket ids (see grow/_rebuild);
+# None means the default hash_to_bucket(cfg) assignment.
+BucketFn = Callable[[jax.Array, HashMemConfig], jax.Array]
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -87,34 +121,49 @@ def build_with_buckets(cfg: HashMemConfig, keys: jax.Array, vals: jax.Array,
                        b: jax.Array) -> HashMem:
     """Bulk load with caller-supplied bucket ids (used by the RLU channel
     layer, which derives (owner shard, local bucket) from one global hash)."""
+    return _scatter_build(cfg, keys, vals, b, valid=None)
+
+
+def _scatter_build(cfg: HashMemConfig, keys: jax.Array, vals: jax.Array,
+                   b: jax.Array, valid: Optional[jax.Array]) -> HashMem:
+    """Shared sort/rank/segment bulk loader.  Entries with ``valid=False``
+    (or bucket id >= num_buckets) are dropped; relative order of surviving
+    entries within a bucket follows their input order (stable sort)."""
     cfg_slots = cfg.slots_per_page
     n = keys.shape[0]
     keys = keys.astype(U32)
     vals = vals.astype(U32)
+    b = b.astype(I32)
+    if valid is not None:
+        b = jnp.where(valid, b, cfg.num_buckets)               # sorts to the end
     order = jnp.argsort(b)
     bs, ks, vs = b[order], keys[order], vals[order]
+    dropped = bs >= cfg.num_buckets
 
     start = jnp.searchsorted(bs, bs, side="left")
     rank = jnp.arange(n, dtype=I32) - start.astype(I32)                    # rank in bucket
     depth = rank // cfg_slots
     slot = rank % cfg_slots
 
-    counts = jnp.zeros((cfg.num_buckets,), I32).at[bs].add(1)
+    counts = jnp.zeros((cfg.num_buckets,), I32).at[bs].add(1, mode="drop")
     n_over = jnp.maximum((counts + cfg_slots - 1) // cfg_slots - 1, 0)     # overflow pages/bucket
     over_off = jnp.cumsum(n_over) - n_over                                 # exclusive prefix
 
+    ob = jnp.minimum(bs, cfg.num_buckets - 1)                              # safe gather
     page = jnp.where(depth == 0, bs,
-                     cfg.num_buckets + over_off[bs] + depth - 1).astype(I32)
+                     cfg.num_buckets + over_off[ob] + depth - 1)
+    page = jnp.where(dropped, cfg.num_pages, page).astype(I32)             # OOB -> dropped
 
     key_pages, val_pages = layout.empty_pool(cfg.num_pages, cfg_slots)
-    key_pages = key_pages.at[page, slot].set(ks)
-    val_pages = val_pages.at[page, slot].set(vs)
-    page_fill = jnp.zeros((cfg.num_pages,), I32).at[page].max(slot + 1)
+    key_pages = key_pages.at[page, slot].set(ks, mode="drop")
+    val_pages = val_pages.at[page, slot].set(vs, mode="drop")
+    page_fill = jnp.zeros((cfg.num_pages,), I32).at[page].max(slot + 1,
+                                                              mode="drop")
 
     # chain links: first element landing on a depth>=1 page links prev -> page
-    is_link = (depth >= 1) & (slot == 0)
+    is_link = (depth >= 1) & (slot == 0) & ~dropped
     prev_page = jnp.where(depth == 1, bs,
-                          cfg.num_buckets + over_off[bs] + depth - 2).astype(I32)
+                          cfg.num_buckets + over_off[ob] + depth - 2).astype(I32)
     link_idx = jnp.where(is_link, prev_page, cfg.num_pages)                # OOB -> dropped
     page_next = jnp.full((cfg.num_pages,), -1, I32).at[link_idx].set(page, mode="drop")
 
@@ -127,21 +176,28 @@ def build_with_buckets(cfg: HashMemConfig, keys: jax.Array, vals: jax.Array,
                    free_top=free_top.astype(I32), config=cfg)
 
 
-def build_check(cfg: HashMemConfig, keys) -> dict:
-    """Pre-flight (non-jit) checks that the arena/chain bounds suffice."""
+def _fit_report(counts, cfg: HashMemConfig) -> dict:
+    """Shared fit check: would per-bucket `counts` fit the chain/arena bounds?"""
     import numpy as np
-    b = np.asarray(hash_to_bucket(jnp.asarray(keys, U32), cfg.num_buckets,
-                                  cfg.hash_fn, cfg.salt))
-    counts = np.bincount(b, minlength=cfg.num_buckets)
     pages = np.maximum((counts + cfg.slots_per_page - 1) // cfg.slots_per_page, 0)
     return {
         "max_chain_needed": int(pages.max(initial=0)),
         "overflow_pages_needed": int(np.maximum(pages - 1, 0).sum()),
         "fits": bool(pages.max(initial=0) <= cfg.max_chain
                      and np.maximum(pages - 1, 0).sum() <= cfg.overflow_pages),
-        "load_factor": float(counts.sum() / (cfg.num_pages * cfg.slots_per_page)),
-        "bucket_counts": counts,
     }
+
+
+def build_check(cfg: HashMemConfig, keys) -> dict:
+    """Pre-flight (non-jit) checks that the arena/chain bounds suffice."""
+    import numpy as np
+    b = np.asarray(hash_to_bucket(jnp.asarray(keys, U32), cfg.num_buckets,
+                                  cfg.hash_fn, cfg.salt))
+    counts = np.bincount(b, minlength=cfg.num_buckets)
+    rep = _fit_report(counts, cfg)
+    rep["load_factor"] = float(counts.sum() / (cfg.num_pages * cfg.slots_per_page))
+    rep["bucket_counts"] = counts
+    return rep
 
 
 # ---------------------------------------------------------------------------
@@ -194,12 +250,98 @@ def _write_key_bits(planes, page, slot, key, key_bits: int):
     return planes.at[page, :, word].set(new)
 
 
-def insert(hm: HashMem, keys: jax.Array, vals: jax.Array):
-    """Batched insert (paper §3.1 Listing 1), sequential within the batch so
-    intra-batch bucket collisions resolve exactly like repeated single inserts.
+def _chain_tails(hm: HashMem, b: jax.Array):
+    """Per-key chain tail page, tail fill and chain length (bounded walk)."""
+    cfg = hm.config
+    tail = hm.bucket_head[b]                                              # (B,)
+    clen = jnp.ones_like(tail)
+    for _ in range(cfg.max_chain - 1):
+        nxt = hm.page_next[tail]
+        has = nxt >= 0
+        tail = jnp.where(has, nxt, tail)
+        clen = clen + has.astype(I32)
+    return tail, hm.page_fill[tail], clen
 
-    Returns (new_hm, ok (B,) bool).  ok=False iff pim_malloc failed
-    (PR_ERROR: arena exhausted or chain bound exceeded).
+
+def insert(hm: HashMem, keys: jax.Array, vals: jax.Array):
+    """Vectorized batched insert: appends the whole batch at the existing
+    chain tails in one shot (sort/rank/segment, same machinery as
+    ``build_with_buckets``).  Equivalent to repeated single inserts in batch
+    order.  Returns (new_hm, ok (B,) bool); see the module docstring for the
+    ok=False (PR_ERROR) semantics.
+    """
+    cfg = hm.config
+    b = hash_to_bucket(keys.astype(U32), cfg.num_buckets, cfg.hash_fn, cfg.salt)
+    return insert_with_buckets(hm, keys, vals, b)
+
+
+def insert_with_buckets(hm: HashMem, keys: jax.Array, vals: jax.Array,
+                        b: jax.Array):
+    """``insert`` with caller-supplied bucket ids (RLU channel layer)."""
+    cfg = hm.config
+    slots = cfg.slots_per_page
+    n = keys.shape[0]
+    keys = keys.astype(U32)
+    vals = vals.astype(U32)
+    b = b.astype(I32)
+
+    tail, fill, clen = _chain_tails(hm, b)
+
+    # stable sort by bucket keeps intra-bucket batch order (duplicate keys
+    # land in insertion order, matching sequential semantics)
+    order = jnp.argsort(b)
+    bs, ks, vs = b[order], keys[order], vals[order]
+    tails, fills, clens = tail[order], fill[order], clen[order]
+
+    start = jnp.searchsorted(bs, bs, side="left")
+    rank = jnp.arange(n, dtype=I32) - start.astype(I32)
+    pos = fills + rank                          # position past the tail start
+    depth = pos // slots                        # 0 = existing tail page
+    slot = pos % slots
+
+    # pim_malloc: every chain-admissible page start claims the next arena
+    # page, in sorted (bucket) order — one cumsum, no per-bucket arrays.
+    # Pages of one bucket stay contiguous (no other bucket's start can fall
+    # between two starts of the same bucket segment).
+    ok_chain = clens + depth <= cfg.max_chain   # RLU command-depth bound
+    is_new_page = ok_chain & (depth >= 1) & (slot == 0)
+    page_idx = jnp.cumsum(is_new_page.astype(I32)) - 1     # shared along page
+    new_id = hm.free_top + page_idx
+    n_fit = jnp.clip(cfg.num_pages - hm.free_top, 0,
+                     jnp.sum(is_new_page.astype(I32)))
+    ok = jnp.where(depth == 0, True, ok_chain & (new_id < cfg.num_pages))
+    page = jnp.where(depth == 0, tails, new_id).astype(I32)
+    wp = jnp.where(ok, page, cfg.num_pages)                # OOB drop if !ok
+
+    key_pages = hm.key_pages.at[wp, slot].set(ks, mode="drop")
+    val_pages = hm.val_pages.at[wp, slot].set(vs, mode="drop")
+    page_fill = hm.page_fill.at[wp].max(slot + 1, mode="drop")
+
+    # chain links: first element on each newly allocated page links prev -> page
+    is_link = ok & (depth >= 1) & (slot == 0)
+    prev = jnp.where(depth == 1, tails, page - 1)
+    link_idx = jnp.where(is_link, prev, cfg.num_pages)
+    page_next = hm.page_next.at[link_idx].set(page, mode="drop")
+
+    planes = hm.planes
+    if planes is not None:
+        planes = layout.update_bitplanes_batch(planes, wp, slot, ks,
+                                               cfg.key_bits)
+
+    ok_orig = jnp.zeros((n,), bool).at[order].set(ok)
+    new = HashMem(key_pages=key_pages, val_pages=val_pages, planes=planes,
+                  bucket_head=hm.bucket_head, page_next=page_next,
+                  page_fill=page_fill,
+                  free_top=(hm.free_top + n_fit).astype(I32), config=cfg)
+    return new, ok_orig
+
+
+def insert_scan(hm: HashMem, keys: jax.Array, vals: jax.Array):
+    """Sequential per-element insert (paper §3.1 Listing 1) via ``lax.scan``.
+
+    Kept as the reference semantics for the vectorized ``insert`` (see the
+    differential tests) and as the benchmark baseline.  NOTE: unlike
+    ``insert``, this version does not enforce the max_chain bound.
     """
     cfg = hm.config
     slots = cfg.slots_per_page
@@ -242,7 +384,9 @@ def insert(hm: HashMem, keys: jax.Array, vals: jax.Array):
 
 
 def delete(hm: HashMem, keys: jax.Array):
-    """Batched tombstone delete (paper §2.5).  Returns (new_hm, found)."""
+    """Batched tombstone delete (paper §2.5).  Returns (new_hm, found).
+    Each query tombstones the FIRST chain-order match of its key; duplicate
+    queries in one batch resolve to the same slot (one removal)."""
     cfg = hm.config
     slots = cfg.slots_per_page
     q = keys.astype(U32)
@@ -258,16 +402,136 @@ def delete(hm: HashMem, keys: jax.Array):
     wp = jnp.where(found, pg, cfg.num_pages)                               # OOB drop
     key_pages = hm.key_pages.at[wp, s].set(TOMBSTONE_KEY, mode="drop")
     planes = hm.planes
-    if planes is not None:
-        def one(pl, args):
-            f, p, sl = args
-            return jnp.where(
-                f, _write_key_bits(pl, p, sl, TOMBSTONE_KEY, cfg.key_bits), pl), None
-        planes, _ = jax.lax.scan(one, planes, (found, jnp.maximum(pg, 0), s))
+    if planes is not None and qn > 0:
+        # dedup identical (page, slot) targets (duplicate queries) so the
+        # batched bit-plane scatter adds each bit exactly once
+        flatidx = jnp.where(found, pg * slots + s, -1)
+        o = jnp.argsort(flatidx)
+        fs = flatidx[o]
+        first = jnp.concatenate([jnp.ones((1,), bool), fs[1:] != fs[:-1]])
+        uniq = jnp.zeros((qn,), bool).at[o].set(first)
+        upd = jnp.where(found & uniq, pg, cfg.num_pages)
+        planes = layout.update_bitplanes_batch(
+            planes, upd, s, jnp.full((qn,), TOMBSTONE_KEY, U32), cfg.key_bits)
     new = HashMem(key_pages=key_pages, val_pages=hm.val_pages, planes=planes,
                   bucket_head=hm.bucket_head, page_next=hm.page_next,
                   page_fill=hm.page_fill, free_top=hm.free_top, config=cfg)
     return new, found
+
+
+# ---------------------------------------------------------------------------
+# Dynamic resizing (grow / compact / auto-grow policy)
+# ---------------------------------------------------------------------------
+
+def live_count(hm: HashMem) -> jax.Array:
+    """() int32 number of live (non-empty, non-tombstone) entries."""
+    kp = hm.key_pages
+    return jnp.sum((kp != EMPTY_KEY) & (kp != TOMBSTONE_KEY)).astype(I32)
+
+
+def load_factor(hm: HashMem) -> jax.Array:
+    """Live entries / total slot capacity, as a traced float32 scalar."""
+    cap = hm.config.num_pages * hm.config.slots_per_page
+    return live_count(hm).astype(jnp.float32) / jnp.float32(cap)
+
+
+def _rebuild(hm: HashMem, new_cfg: HashMemConfig,
+             bucket_fn: Optional[BucketFn]) -> HashMem:
+    """Re-bucket every live entry into a fresh arena under ``new_cfg``.
+
+    Flat (page-major) slot order IS chain order per bucket (page ids increase
+    along every chain), so same-key duplicates keep their relative order —
+    probe/delete semantics survive the rebuild.
+    """
+    keys = hm.key_pages.reshape(-1)
+    vals = hm.val_pages.reshape(-1)
+    live = (keys != EMPTY_KEY) & (keys != TOMBSTONE_KEY)
+    if bucket_fn is None:
+        b = hash_to_bucket(keys, new_cfg.num_buckets, new_cfg.hash_fn,
+                           new_cfg.salt)
+    else:
+        b = bucket_fn(keys, new_cfg)
+    return _scatter_build(new_cfg, keys, vals, b, valid=live)
+
+
+def grow(hm: HashMem, factor: Optional[int] = None,
+         bucket_fn: Optional[BucketFn] = None) -> HashMem:
+    """Rehash into a ``factor``x larger arena (default config.growth_factor):
+    num_buckets and overflow_pages both scale, all live entries are
+    re-bucketed, chains and bit-planes are rebuilt.  Tombstones are dropped
+    (grow subsumes compact)."""
+    cfg = hm.config
+    f = factor or cfg.growth_factor
+    new_cfg = dataclasses.replace(cfg, num_buckets=cfg.num_buckets * f,
+                                  overflow_pages=cfg.overflow_pages * f)
+    return _rebuild(hm, new_cfg, bucket_fn)
+
+
+def compact(hm: HashMem, bucket_fn: Optional[BucketFn] = None) -> HashMem:
+    """Reclaim tombstoned slots and overflow pages by rebuilding in place
+    (same config).  After compact: stats()['tombstones'] == 0 and every
+    chain is the minimum length for its live population."""
+    return _rebuild(hm, hm.config, bucket_fn)
+
+
+def rebuild_check(hm: HashMem, new_cfg: HashMemConfig,
+                  bucket_fn: Optional[BucketFn] = None) -> dict:
+    """Host-side pre-flight: would the live entries fit under new_cfg?"""
+    import numpy as np
+    keys = np.asarray(hm.key_pages).reshape(-1)
+    live = (keys != np.uint32(0xFFFFFFFF)) & (keys != np.uint32(0xFFFFFFFE))
+    lk = jnp.asarray(keys[live])
+    if bucket_fn is None:
+        b = hash_to_bucket(lk, new_cfg.num_buckets, new_cfg.hash_fn,
+                           new_cfg.salt)
+    else:
+        b = bucket_fn(lk, new_cfg)
+    counts = np.bincount(np.asarray(b), minlength=new_cfg.num_buckets)
+    return _fit_report(counts, new_cfg)
+
+
+def insert_auto(hm: HashMem, keys: jax.Array, vals: jax.Array,
+                bucket_fn: Optional[BucketFn] = None, max_grows: int = 8):
+    """Host-level insert with auto-grow (NOT jit-compatible: growth changes
+    array shapes).  Grows proactively when the batch would exceed
+    config.max_load_factor and reactively while any element fails, up to
+    ``max_grows`` doublings.  Returns (new_hm, ok (B,) bool) — ok is all-True
+    unless growth was exhausted/disabled."""
+    import numpy as np
+    keys = jnp.asarray(keys).astype(U32)
+    vals = jnp.asarray(vals).astype(U32)
+    n = keys.shape[0]
+    cfg = hm.config
+    grows = 0
+    if cfg.auto_grow:
+        cap = cfg.num_pages * cfg.slots_per_page
+        live = int(live_count(hm))
+        while (live + n) > cfg.max_load_factor * cap and grows < max_grows:
+            hm = grow(hm, bucket_fn=bucket_fn)
+            cfg = hm.config
+            cap = cfg.num_pages * cfg.slots_per_page
+            grows += 1
+
+    ok = np.zeros((n,), bool)
+    remaining = np.arange(n)
+    while remaining.size:
+        kr, vr = keys[remaining], vals[remaining]
+        if bucket_fn is None:
+            br = hash_to_bucket(kr, hm.config.num_buckets, hm.config.hash_fn,
+                                hm.config.salt)
+        else:
+            br = bucket_fn(kr, hm.config)
+        hm, ok_r = insert_with_buckets(hm, kr, vr, br)
+        ok_np = np.asarray(ok_r)
+        ok[remaining[ok_np]] = True
+        remaining = remaining[~ok_np]
+        if remaining.size == 0:
+            break
+        if not hm.config.auto_grow or grows >= max_grows:
+            break
+        hm = grow(hm, bucket_fn=bucket_fn)
+        grows += 1
+    return hm, jnp.asarray(ok)
 
 
 # ---------------------------------------------------------------------------
@@ -289,6 +553,7 @@ def stats(hm: HashMem) -> dict:
             n_ += 1
             p = nxt[p]
         chain_len[bkt] = n_
+    cap = cfg.num_pages * cfg.slots_per_page
     return {
         "live_entries": int(live.sum()),
         "tombstones": int((kp == np.uint32(0xFFFFFFFE)).sum()),
@@ -296,4 +561,7 @@ def stats(hm: HashMem) -> dict:
         "free_pages": int(cfg.num_pages - np.asarray(hm.free_top)),
         "chain_lengths": chain_len,
         "max_chain": int(chain_len.max(initial=0)),
+        "capacity": cap,
+        "load_factor": float(live.sum() / cap),
+        "num_buckets": cfg.num_buckets,
     }

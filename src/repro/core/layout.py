@@ -43,6 +43,30 @@ def pack_bitplanes(key_pages, key_bits: int):
     return planes
 
 
+def update_bitplanes_batch(planes, pages, slots_idx, new_keys, key_bits: int):
+    """Batched incremental bit-plane maintenance for a set of slot writes.
+
+    ``pages``/``slots_idx`` (B,) int32 name the written slots (out-of-range
+    page => the update is dropped, matching ``.at[...].set(mode="drop")`` on
+    the key pages); ``new_keys`` (B,) uint32 are the values written there.
+    Each in-range (page, slot) pair must be unique within the batch: bits are
+    merged with scatter-adds, which only act as OR when every added bit is
+    distinct.
+    """
+    P, kb, W = planes.shape
+    assert kb == key_bits
+    word = (slots_idx // 32).astype(jnp.int32)
+    bit = (slots_idx % 32).astype(U32)
+    # per-(page, word) mask of rewritten lanes, then per-plane replacement bits
+    clear = jnp.zeros((P, W), U32).at[pages, word].add(U32(1) << bit,
+                                                       mode="drop")
+    j = jnp.arange(key_bits, dtype=U32)
+    kbits = (((new_keys.astype(U32)[:, None] >> j[None, :]) & U32(1))
+             << bit[:, None])                                       # (B, kb)
+    setb = jnp.zeros((P, kb, W), U32).at[pages, :, word].add(kbits, mode="drop")
+    return (planes & ~clear[:, None, :]) | setb
+
+
 def unpack_bitplanes(planes, key_bits: int):
     """Inverse of pack_bitplanes (for tests): (P, b, W) -> (P, 32W) uint32."""
     P, b, W = planes.shape

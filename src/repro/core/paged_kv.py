@@ -32,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
+
 NEG_INF = -1e30
 
 
@@ -48,14 +50,14 @@ def init_pool(num_pages: int, page_tokens: int, kv_heads: int, head_dim: int,
 def _flat_index(axes: Sequence[str]) -> jax.Array:
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
 def _axes_size(axes: Sequence[str]) -> int:
     n = 1
     for a in axes:
-        n *= jax.lax.axis_size(a)
+        n *= compat.axis_size(a)
     return n
 
 
@@ -225,10 +227,17 @@ class PageTableManager:
         self.free = [list(range(c * self.pps, (c + 1) * self.pps))[::-1]
                      for c in range(arenas)]
         self.owned: dict[int, list[int]] = {}
+        self.grow_events = 0
+        self.compact_events = 0
+        self._tombstones = 0        # host-side count; avoids device syncs
 
     def _key(self, seq_id: int, block: int) -> int:
         assert block < self.MAX_BLOCKS
         return seq_id * self.MAX_BLOCKS + block
+
+    def _return_pages(self, pages):
+        for p in pages:
+            self.free[p // self.pps].append(p)
 
     def alloc_seq(self, seq_id: int, n_blocks: int, group: int = 0) -> np.ndarray:
         from repro.core import hashmap
@@ -236,13 +245,28 @@ class PageTableManager:
         for j in range(n_blocks):
             arena = self.free[group * self.Dm + j % self.Dm]
             if not arena:
+                self._return_pages(phys)            # no partial-alloc leak
                 raise MemoryError("pim_malloc: PR_ERROR (arena exhausted)")
             p = arena.pop()
             phys.append(p)
             keys.append(self._key(seq_id, j))
-        self.hm, ok = hashmap.insert(
-            self.hm, jnp.asarray(keys, jnp.uint32), jnp.asarray(phys, jnp.uint32))
+        if self.cfg.auto_grow:
+            # arena exhaustion / chain overflow in the page table triggers a
+            # resize instead of a dropped allocation (hashmap.py docstring)
+            before = self.hm.config.num_buckets
+            self.hm, ok = hashmap.insert_auto(
+                self.hm, jnp.asarray(keys, jnp.uint32),
+                jnp.asarray(phys, jnp.uint32))
+            if self.hm.config.num_buckets != before:
+                self.grow_events += 1
+                self.cfg = self.hm.config
+                self._tombstones = 0                # grow rebuild dropped them
+        else:
+            self.hm, ok = hashmap.insert(
+                self.hm, jnp.asarray(keys, jnp.uint32),
+                jnp.asarray(phys, jnp.uint32))
         if not bool(jnp.all(ok)):
+            self._return_pages(phys)
             raise MemoryError("page-table insert failed (PR_ERROR)")
         self.owned.setdefault(seq_id, []).extend(phys)
         return np.asarray(phys, np.int32)
@@ -267,8 +291,23 @@ class PageTableManager:
             return
         keys = [self._key(seq_id, j) for j in range(len(pages))]
         self.hm, _ = hashmap.delete(self.hm, jnp.asarray(keys, jnp.uint32))
-        for p in pages:
-            self.free[p // self.pps].append(p)
+        # every owned key was inserted, so every delete tombstones one slot;
+        # counting host-side avoids a device reduction+sync per free
+        self._tombstones += len(keys)
+        self._return_pages(pages)
+        self.maybe_compact()
+
+    def maybe_compact(self):
+        """Reclaim tombstoned page-table slots once they pass the configured
+        fraction of capacity (long-lived serving would otherwise grow chains
+        without bound — the paper's §2.5 'wasted space')."""
+        from repro.core import hashmap
+        cfg = self.hm.config
+        cap = cfg.num_pages * cfg.slots_per_page
+        if self._tombstones > cfg.compact_tombstone_frac * cap:
+            self.hm = hashmap.compact(self.hm)
+            self.compact_events += 1
+            self._tombstones = 0
 
     def live_pages(self) -> int:
         return sum(len(v) for v in self.owned.values())

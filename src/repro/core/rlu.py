@@ -28,6 +28,7 @@ from repro.configs.base import HashMemConfig
 from repro.core import hashmap
 from repro.core.hashing import EMPTY_KEY, HASH_FNS
 from repro.core.probe import probe_pages
+from repro.core.compat import shard_map
 
 U32 = jnp.uint32
 I32 = jnp.int32
@@ -59,6 +60,65 @@ def build_sharded(cfg: HashMemConfig, keys, vals, num_shards: int):
         # they do consume slots, so size the scaled config accordingly.
         shards.append(hashmap.build_with_buckets(cfg, k, v, b))
     return jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+
+
+def _local_bucket_fn(num_shards: int):
+    """bucket_fn for hashmap.grow/insert on one shard: re-derive the local
+    bucket from the global hash under the (possibly grown) shard config."""
+    def fn(keys, cfg: HashMemConfig):
+        h = HASH_FNS[cfg.hash_fn](keys.astype(U32), cfg.salt)
+        return ((h // U32(num_shards)) % U32(cfg.num_buckets)).astype(I32)
+    return fn
+
+
+def insert_sharded(hm_stacked, keys, vals, cfg: HashMemConfig,
+                   num_shards: int, max_grows: int = 4):
+    """Host-level routed insert into the stacked shard pytree.
+
+    Keys are routed to their owner shard (same global-hash split as
+    build_sharded) and batch-inserted with the vectorized engine.  When any
+    shard reports PR_ERROR and cfg.auto_grow is set, ALL shards grow by the
+    same factor — the stacked pytree must stay shape-homogeneous to remain
+    shardable over the mesh axis — and the failed elements retry.
+
+    Returns (hm_stacked', ok (N,) bool, cfg').  cfg' differs from cfg after
+    growth; pass it to subsequent probe_sharded/insert_sharded calls.
+    """
+    import numpy as np
+    keys = jnp.asarray(keys).astype(U32)
+    vals = jnp.asarray(vals).astype(U32)
+    n = keys.shape[0]
+    owner, _ = owner_and_local_bucket(keys, cfg, num_shards)  # owner is
+    owner_np = np.asarray(owner)                              # grow-invariant
+    bfn = _local_bucket_fn(num_shards)
+    shards = [jax.tree.map(lambda x, d=d: x[d], hm_stacked)
+              for d in range(num_shards)]
+
+    ok = np.zeros((n,), bool)
+    remaining = {d: np.nonzero(owner_np == d)[0] for d in range(num_shards)}
+    grows = 0
+    while True:
+        any_fail = False
+        for d in range(num_shards):
+            idx = remaining[d]
+            if idx.size == 0:
+                continue
+            kd, vd = keys[idx], vals[idx]
+            hm_d, ok_d = hashmap.insert_with_buckets(
+                shards[d], kd, vd, bfn(kd, shards[d].config))
+            shards[d] = hm_d
+            ok_np = np.asarray(ok_d)
+            ok[idx[ok_np]] = True
+            remaining[d] = idx[~ok_np]
+            any_fail |= remaining[d].size > 0
+        if not any_fail or not cfg.auto_grow or grows >= max_grows:
+            break
+        # synchronized growth keeps every shard the same shape
+        shards = [hashmap.grow(s, bucket_fn=bfn) for s in shards]
+        grows += 1
+
+    hm_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+    return hm_stacked, jnp.asarray(ok), shards[0].config
 
 
 def _local_probe(hm_local, queries, cfg: HashMemConfig, num_shards: int):
@@ -102,7 +162,7 @@ def probe_sharded(mesh, hm_stacked, queries, cfg: HashMemConfig,
         inv = jnp.argsort(order)
         return v_sorted[inv], f_sorted[inv]
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P(axis)),
@@ -117,7 +177,7 @@ def probe_replicated(mesh, hm, queries, cfg: HashMemConfig, axis: str = "data"):
     def shard_fn(hm_local, q_local):
         return hashmap.probe(hm_local, q_local, backend=cfg.backend)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(), P(axis)),
         out_specs=(P(axis), P(axis)),

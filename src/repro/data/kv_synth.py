@@ -37,6 +37,37 @@ def probe_set(keys: np.ndarray, fraction: float, seed: int = 1):
     return keys[idx], idx
 
 
+def churn_workload(n_ops: int, keyspace: int = 4096, insert_batch: int = 8,
+                   delete_batch: int = 4, probe_batch: int = 16,
+                   p_insert: float = 0.5, p_delete: float = 0.25,
+                   seed: int = 0):
+    """Mixed online-mutation op stream for the mutation engine.
+
+    Yields ``(op, keys, vals)`` tuples with op in {"insert", "delete",
+    "probe"}; keys are drawn Zipf-skewed from a bounded keyspace so the
+    stream produces duplicate keys, tombstone-then-reinsert patterns and
+    hot buckets — the access shape a live serving table sees, as opposed to
+    the paper's populate-once microbenchmark (kv_dataset above).
+    """
+    rng = np.random.default_rng(seed)
+    pool = rng.choice(np.uint32(0xFFFFFFF0), size=keyspace,
+                      replace=False).astype(np.uint32)
+    # Zipf-ish ranks: hot head, long tail
+    w = 1.0 / np.arange(1, keyspace + 1) ** 0.8
+    w /= w.sum()
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < p_insert:
+            k = rng.choice(pool, size=insert_batch, p=w)
+            v = rng.integers(1, 2**31, size=insert_batch,
+                             dtype=np.int64).astype(np.uint32)
+            yield "insert", k, v
+        elif r < p_insert + p_delete:
+            yield "delete", rng.choice(pool, size=delete_batch, p=w), None
+        else:
+            yield "probe", rng.choice(pool, size=probe_batch, p=w), None
+
+
 def dictionary_words(n: int = 350_000, seed: int = 3) -> np.ndarray:
     """Synthetic 'dictionary': Zipf-weighted letter n-grams dictionary-encoded
     to uint32 (paper Fig. 4 maps the first 350k words of a dictionary).

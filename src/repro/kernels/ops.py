@@ -9,6 +9,7 @@ from functools import partial
 
 import jax
 
+from repro.core import layout
 from repro.kernels.probe_area import probe_pages_area
 from repro.kernels.probe_bitserial import probe_pages_bitserial
 from repro.kernels.probe_perf import probe_pages_perf
@@ -16,6 +17,7 @@ from repro.kernels import ref
 
 __all__ = [
     "probe_perf", "probe_area", "probe_bitserial", "probe_ref",
+    "bitplane_update", "bitplane_rebuild",
 ]
 
 probe_perf = jax.jit(partial(probe_pages_perf))
@@ -23,3 +25,9 @@ probe_area = jax.jit(partial(probe_pages_area))
 probe_bitserial = jax.jit(partial(probe_pages_bitserial), static_argnames=("key_bits",))
 probe_ref = jax.jit(ref.probe_pages_ref)
 probe_bitplanes_ref = jax.jit(ref.probe_bitplanes_ref, static_argnames=("key_bits",))
+
+# bit-plane maintenance for the mutation engine: batched incremental update
+# (insert/delete write sets) and the full from-scratch rebuild (grow/compact)
+bitplane_update = jax.jit(layout.update_bitplanes_batch,
+                          static_argnames=("key_bits",))
+bitplane_rebuild = jax.jit(layout.pack_bitplanes, static_argnames=("key_bits",))

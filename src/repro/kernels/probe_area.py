@@ -26,45 +26,48 @@ LINE = 128
 STRIP = 128
 
 
-def _kernel(pages_ref, queries_ref, keys_ref, vals_ref, out_ref):
-    c = pl.program_id(1)
-    q = pl.program_id(0)
+def _make_kernel(strip: int):
+    def _kernel(pages_ref, queries_ref, keys_ref, vals_ref, out_ref):
+        c = pl.program_id(1)
+        q = pl.program_id(0)
 
-    @pl.when(c == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        @pl.when(c == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
 
-    page = pages_ref[q, c]
-    query = queries_ref[q]
-    valid = page >= 0
-    S = keys_ref.shape[1]
-    n_strips = S // STRIP
+        page = pages_ref[q, c]
+        query = queries_ref[q]
+        valid = page >= 0
+        S = keys_ref.shape[1]
+        n_strips = S // strip
 
-    def body(i, carry):
-        found, val, slot = carry
-        krow = keys_ref[0, pl.dslice(i * STRIP, STRIP)]     # (STRIP,) uint32
-        vrow = vals_ref[0, pl.dslice(i * STRIP, STRIP)]
-        match = (krow == query) & valid
-        any_m = jnp.any(match)
-        iota = jax.lax.broadcasted_iota(jnp.int32, (STRIP,), 0)
-        s_local = jnp.min(jnp.where(match, iota, jnp.int32(2**30)))
-        v_local = jnp.max(jnp.where((iota == s_local) & match, vrow, U32(0)))
-        take = any_m & jnp.logical_not(found)               # element-serial latch
-        return (found | any_m,
-                jnp.where(take, v_local, val),
-                jnp.where(take, i * STRIP + s_local, slot))
+        def body(i, carry):
+            found, val, slot = carry
+            krow = keys_ref[0, pl.dslice(i * strip, strip)]     # (strip,) uint32
+            vrow = vals_ref[0, pl.dslice(i * strip, strip)]
+            match = (krow == query) & valid
+            any_m = jnp.any(match)
+            iota = jax.lax.broadcasted_iota(jnp.int32, (strip,), 0)
+            s_local = jnp.min(jnp.where(match, iota, jnp.int32(2**30)))
+            v_local = jnp.max(jnp.where((iota == s_local) & match, vrow, U32(0)))
+            take = any_m & jnp.logical_not(found)               # element-serial latch
+            return (found | any_m,
+                    jnp.where(take, v_local, val),
+                    jnp.where(take, i * strip + s_local, slot))
 
-    found, val, slot = jax.lax.fori_loop(
-        0, n_strips, body, (jnp.bool_(False), U32(0), jnp.int32(0)))
+        found, val, slot = jax.lax.fori_loop(
+            0, n_strips, body, (jnp.bool_(False), U32(0), jnp.int32(0)))
 
-    already = out_ref[0, 1] > U32(0)
+        already = out_ref[0, 1] > U32(0)
 
-    @pl.when(found & jnp.logical_not(already))
-    def _write():
-        out_ref[0, 0] = val
-        out_ref[0, 1] = U32(1)
-        out_ref[0, 2] = page.astype(U32)
-        out_ref[0, 3] = slot.astype(U32)
+        @pl.when(found & jnp.logical_not(already))
+        def _write():
+            out_ref[0, 0] = val
+            out_ref[0, 1] = U32(1)
+            out_ref[0, 2] = page.astype(U32)
+            out_ref[0, 3] = slot.astype(U32)
+
+    return _kernel
 
 
 def probe_pages_area(key_pages, val_pages, queries, pages, *, interpret=None):
@@ -72,7 +75,9 @@ def probe_pages_area(key_pages, val_pages, queries, pages, *, interpret=None):
         interpret = jax.default_backend() != "tpu"
     qn, C = pages.shape
     P, S = key_pages.shape
-    assert S % STRIP == 0, "slots must be a multiple of 128"
+    # full lane strips on real shapes; small test pages fall back to one strip
+    strip = min(STRIP, S)
+    assert S % strip == 0, "slots must be a multiple of the strip width"
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -84,7 +89,7 @@ def probe_pages_area(key_pages, val_pages, queries, pages, *, interpret=None):
         out_specs=pl.BlockSpec((1, LINE), lambda q, c, pages, queries: (q, 0)),
     )
     out = pl.pallas_call(
-        _kernel,
+        _make_kernel(strip),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((qn, LINE), U32),
         interpret=interpret,

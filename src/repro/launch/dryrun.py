@@ -200,6 +200,8 @@ def lower_cell(arch: str, shape_name: str, mesh, probe: str = "full"):
 
 def analyze(compiled, meta) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):           # older jax: list of per-program dicts
+        ca = ca[0] if ca else {}
     rec = dict(meta)
     rec["flops_per_device"] = float(ca.get("flops", 0.0))
     rec["bytes_per_device"] = float(ca.get("bytes accessed", 0.0))
@@ -231,15 +233,20 @@ def _mesh_for(mesh_kind: str):
     return make_production_mesh(multi_pod=(mesh_kind == "multi"))
 
 
+def report_name(arch, shape_name, mesh_kind, probe) -> str:
+    """Canonical per-cell report filename (tests import this — keep in sync)."""
+    return f"{arch}__{shape_name}__{mesh_kind}__{probe}.json"
+
+
 def run_cell(arch, shape_name, mesh_kind, probe, out_dir: Path):
-    mesh = _mesh_for(mesh_kind)
-    name = f"{arch}__{shape_name}__{mesh_kind}__{probe}.json"
+    name = report_name(arch, shape_name, mesh_kind, probe)
     out = out_dir / name
     if out.exists():
         print(f"[skip] {name}")
         return json.loads(out.read_text())
     t0 = time.time()
     try:
+        mesh = _mesh_for(mesh_kind)
         compiled, meta = lower_cell(arch, shape_name, mesh, probe)
         rec = analyze(compiled, meta)
         rec["ok"] = True

@@ -100,7 +100,9 @@ def serve(cfg, mesh, *, batch=4, horizon=256, page_tokens=32, requests=8,
     dt_val = time.time() - t0
     if verbose:
         print(f"served {len(done)} requests in {steps_run} decode steps, "
-              f"{dt_val:.1f}s; live pages after drain: {mgr.live_pages()}")
+              f"{dt_val:.1f}s; live pages after drain: {mgr.live_pages()}; "
+              f"page-table grows={mgr.grow_events} "
+              f"compactions={mgr.compact_events}")
         for req in done[:4]:
             print(f"  req {req['id']}: prompt {req['prompt'][:4]}... -> "
                   f"out {req['out'][:8]}")

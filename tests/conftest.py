@@ -5,4 +5,28 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run tests marked slow (long randomized mutation schedules)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running randomized schedules (>1k ops); "
+        "run with --runslow or REPRO_RUN_SLOW=1")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow") or os.environ.get("REPRO_RUN_SLOW"):
+        return
+    skip_slow = pytest.mark.skip(reason="needs --runslow (or REPRO_RUN_SLOW=1)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

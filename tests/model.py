@@ -1,0 +1,76 @@
+"""Pure-Python reference model for the HashMem differential tests.
+
+Mirrors the exact observable semantics of ``repro.core.hashmap``:
+
+  * duplicate keys are all stored; probe returns the OLDEST duplicate's
+    value (first match in chain order == insertion order within a bucket,
+    preserved across grow/compact rebuilds);
+  * delete tombstones the oldest duplicate only; duplicate queries in one
+    delete batch resolve to the same slot (a single removal, every query
+    still reports found=True);
+  * insert consumes the engine's per-element ok mask: elements the engine
+    refused (PR_ERROR) are not applied to the model either — the model
+    checks agreement of the *stored* state, while the harness separately
+    asserts ok patterns where capacity is known.
+
+The model is deliberately dumb: a dict of FIFO value lists.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+
+class DictModel:
+    """key (int) -> FIFO list of values (ints, oldest first)."""
+
+    def __init__(self):
+        self.d: dict[int, list[int]] = OrderedDict()
+
+    # -- mutations ---------------------------------------------------------
+    def insert(self, keys, vals, ok):
+        for k, v, o in zip(keys, vals, ok):
+            if bool(o):
+                self.d.setdefault(int(k), []).append(int(v))
+
+    def delete(self, keys):
+        """Returns the expected found mask.  Duplicate keys in one batch hit
+        the same slot: found for all, but only one element removed."""
+        found = []
+        removed_this_batch = set()
+        for k in keys:
+            k = int(k)
+            lst = self.d.get(k)
+            if lst:
+                found.append(True)
+                if k not in removed_this_batch:
+                    lst.pop(0)
+                    removed_this_batch.add(k)
+                    if not lst:
+                        del self.d[k]
+            elif k in removed_this_batch:
+                # emptied earlier in this batch: the hashmap resolved all
+                # duplicates against the PRE-batch state, so still found
+                found.append(True)
+            else:
+                found.append(False)
+        return found
+
+    # -- queries -----------------------------------------------------------
+    def probe(self, keys):
+        """Returns (expected values, expected found mask)."""
+        vals, found = [], []
+        for k in keys:
+            lst = self.d.get(int(k))
+            if lst:
+                vals.append(lst[0])
+                found.append(True)
+            else:
+                vals.append(0)
+                found.append(False)
+        return vals, found
+
+    def live_entries(self) -> int:
+        return sum(len(v) for v in self.d.values())
+
+    def keys(self):
+        return list(self.d.keys())

@@ -27,8 +27,8 @@ def test_channel_parallel_probe_matches_single():
         import numpy as np, jax, jax.numpy as jnp
         from repro.configs.base import HashMemConfig
         from repro.core import hashmap, rlu
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = HashMemConfig(num_buckets=32, slots_per_page=128,
                             overflow_pages=64, max_chain=4, backend="perf")
         rng = np.random.default_rng(2)

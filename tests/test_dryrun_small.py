@@ -20,11 +20,16 @@ def run_dryrun(arch, shape, mesh_kind, probe, tmp_path, timeout=540):
          "--shape", shape, "--mesh", mesh_kind, "--probe", probe,
          "--out", str(tmp_path)],
         capture_output=True, text=True, env=env, timeout=timeout)
-    name = f"{arch}__{shape}__{mesh_kind}__{probe}.json"
-    rec = json.loads((tmp_path / name).read_text())
+    from repro.launch.dryrun import report_name
+    name = report_name(arch, shape, mesh_kind, probe)
+    report = tmp_path / name
+    # check the exit code BEFORE reading the report so a crashed dry-run
+    # surfaces its own traceback instead of a FileNotFoundError here
     assert r.returncode == 0, \
         f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
-    return rec
+    assert report.exists(), \
+        f"dry-run wrote {[p.name for p in tmp_path.iterdir()]}, expected {name}"
+    return json.loads(report.read_text())
 
 
 def test_train_cell_lowers_and_reports(tmp_path):

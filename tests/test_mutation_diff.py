@@ -1,0 +1,329 @@
+"""Differential test harness for the online mutation engine.
+
+Randomized mixed insert/probe/delete/grow/compact schedules run against two
+real HashMem structures (one plain, one bit-plane-backed) and a pure-Python
+dict reference model (tests/model.py).  Every probe is checked across ALL
+FOUR backends (ref / area / perf / bitserial); ``stats()`` invariants are
+asserted after every grow/compact and at the end of every schedule:
+
+  * live_entries == model population
+  * sum(chain_lengths) == free_top (every allocated page is linked)
+  * max chain length <= config.max_chain (the insert engine refuses instead
+    of silently overflowing the RLU command depth)
+  * bit-planes decode back to exactly the key pages
+  * tombstones == 0 after grow/compact (rebuilds reclaim the wasted space)
+
+Batch shapes are fixed so the jitted probe kernels compile once per
+(backend, arena size); growth follows a deterministic doubling chain, so the
+whole suite touches a handful of compiled shapes.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import HashMemConfig
+from repro.core import hashmap, layout
+from repro.core.hashing import TOMBSTONE_KEY
+
+from model import DictModel
+
+INSERT_B, DELETE_B, PROBE_B = 8, 4, 16
+PLAIN_BACKENDS = ("ref", "perf", "area")
+GROW_CAP_BUCKETS = 64          # bounds the set of compiled arena shapes
+
+
+def _cfg(backend: str) -> HashMemConfig:
+    return HashMemConfig(num_buckets=8, slots_per_page=32, overflow_pages=24,
+                         max_chain=4, backend=backend, auto_grow=False)
+
+
+class DiffHarness:
+    """One schedule: two live structures + the dict model, op by op."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+        self.hm_plain = hashmap.create(_cfg("perf"))
+        self.hm_bits = hashmap.create(_cfg("bitserial"))
+        self.model = DictModel()
+        self.keyspace = self.rng.choice(
+            100_000, 256, replace=False).astype(np.uint32)
+
+    # -- ops ---------------------------------------------------------------
+    def op_insert(self):
+        ks = self.rng.choice(self.keyspace, INSERT_B).astype(np.uint32)
+        vs = self.rng.integers(1, 2**31, INSERT_B).astype(np.uint32)
+        jk, jv = jnp.asarray(ks), jnp.asarray(vs)
+        self.hm_plain, ok1 = hashmap.insert(self.hm_plain, jk, jv)
+        self.hm_bits, ok2 = hashmap.insert(self.hm_bits, jk, jv)
+        ok1, ok2 = np.asarray(ok1), np.asarray(ok2)
+        assert (ok1 == ok2).all(), "backends disagree on PR_ERROR"
+        self.model.insert(ks, vs, ok1)
+
+    def op_delete(self):
+        live = self.model.keys()
+        pool = np.concatenate([np.asarray(live, np.uint32),
+                               self.rng.choice(self.keyspace, 4)
+                               .astype(np.uint32)]) if live else self.keyspace
+        ks = self.rng.choice(pool, DELETE_B).astype(np.uint32)
+        jk = jnp.asarray(ks)
+        self.hm_plain, f1 = hashmap.delete(self.hm_plain, jk)
+        self.hm_bits, f2 = hashmap.delete(self.hm_bits, jk)
+        exp = self.model.delete(ks)
+        assert (np.asarray(f1) == exp).all()
+        assert (np.asarray(f2) == exp).all()
+
+    def op_probe(self):
+        live = self.model.keys()
+        pool = np.concatenate([np.asarray(live, np.uint32),
+                               self.rng.choice(self.keyspace, 8)
+                               .astype(np.uint32)]) if live else self.keyspace
+        ks = self.rng.choice(pool, PROBE_B).astype(np.uint32)
+        expv, expf = self.model.probe(ks)
+        expv, expf = np.asarray(expv, np.uint32), np.asarray(expf)
+        q = jnp.asarray(ks)
+        results = {b: hashmap.probe(self.hm_plain, q, backend=b)
+                   for b in PLAIN_BACKENDS}
+        results["bitserial"] = hashmap.probe(self.hm_bits, q,
+                                             backend="bitserial")
+        for b, (v, f) in results.items():
+            v, f = np.asarray(v), np.asarray(f)
+            assert (f == expf).all(), f"{b}: found mask diverged"
+            assert (v[expf] == expv[expf]).all(), f"{b}: values diverged"
+
+    def op_grow(self):
+        if self.hm_plain.config.num_buckets >= GROW_CAP_BUCKETS:
+            return
+        self.hm_plain = hashmap.grow(self.hm_plain)
+        self.hm_bits = hashmap.grow(self.hm_bits)
+        self.check_invariants(expect_no_tombs=True)
+
+    def op_compact(self):
+        self.hm_plain = hashmap.compact(self.hm_plain)
+        self.hm_bits = hashmap.compact(self.hm_bits)
+        self.check_invariants(expect_no_tombs=True)
+
+    # -- invariants --------------------------------------------------------
+    def check_invariants(self, expect_no_tombs: bool = False):
+        for hm in (self.hm_plain, self.hm_bits):
+            st = hashmap.stats(hm)
+            assert st["live_entries"] == self.model.live_entries()
+            if expect_no_tombs:
+                assert st["tombstones"] == 0
+            cl = st["chain_lengths"]
+            assert (cl >= 1).all()
+            assert st["max_chain"] <= hm.config.max_chain
+            assert int(cl.sum()) == int(np.asarray(hm.free_top))
+            assert st["free_pages"] == \
+                hm.config.num_pages - int(np.asarray(hm.free_top))
+        decoded = layout.unpack_bitplanes(self.hm_bits.planes,
+                                          self.hm_bits.config.key_bits)
+        assert bool(jnp.all(decoded == self.hm_bits.key_pages)), \
+            "bit-planes out of sync with key pages"
+
+
+OP_NAMES = np.array(["insert", "probe", "delete", "grow", "compact"])
+OP_WEIGHTS = np.array([0.40, 0.25, 0.20, 0.08, 0.07])
+
+
+def run_schedule(seed: int, n_ops: int):
+    h = DiffHarness(seed)
+    ops = h.rng.choice(OP_NAMES, n_ops, p=OP_WEIGHTS)
+    for op in ops:
+        getattr(h, f"op_{op}")()
+    h.op_probe()
+    h.check_invariants(expect_no_tombs=False)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# The differential sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(40))
+def test_diff_schedule(seed):
+    """Tier-1 slice of the randomized sweep (fast; ~12 mixed ops each)."""
+    run_schedule(seed, n_ops=12)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("block", range(10))
+def test_diff_schedule_sweep_500(block):
+    """The full 500-schedule acceptance sweep, 50 schedules per block."""
+    for seed in range(1000 + block * 50, 1000 + (block + 1) * 50):
+        run_schedule(seed, n_ops=12)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [7, 8])
+def test_diff_schedule_long(seed):
+    """>1k-op schedules (slow marker per tests/conftest.py)."""
+    run_schedule(seed, n_ops=1200)
+
+
+# ---------------------------------------------------------------------------
+# Directed mutation-engine tests
+# ---------------------------------------------------------------------------
+
+def test_insert_matches_scan_reference():
+    """The vectorized insert must be element-for-element equivalent to the
+    sequential lax.scan reference on collision-heavy batches."""
+    cfg = _cfg("bitserial")
+    rng = np.random.default_rng(3)
+    hm_v = hashmap.create(cfg)
+    hm_s = hashmap.create(cfg)
+    for _ in range(6):
+        ks = rng.integers(0, 64, 32).astype(np.uint32)   # heavy duplication
+        vs = rng.integers(1, 2**31, 32).astype(np.uint32)
+        hm_v, ok_v = hashmap.insert(hm_v, jnp.asarray(ks), jnp.asarray(vs))
+        hm_s, ok_s = hashmap.insert_scan(hm_s, jnp.asarray(ks), jnp.asarray(vs))
+        assert (np.asarray(ok_v) == np.asarray(ok_s)).all()
+        for field in ("key_pages", "val_pages", "page_next", "page_fill",
+                      "free_top", "planes"):
+            a, b = getattr(hm_v, field), getattr(hm_s, field)
+            assert bool(jnp.all(a == b)), f"{field} diverged from scan reference"
+
+
+def test_duplicate_keys_fifo_order_across_grow():
+    """Duplicates: probe returns the oldest, delete pops the oldest, and the
+    order survives grow and compact rebuilds."""
+    cfg = _cfg("perf")
+    hm = hashmap.create(cfg)
+    k = jnp.asarray([42, 42, 42], jnp.uint32)
+    v = jnp.asarray([1, 2, 3], jnp.uint32)
+    hm, ok = hashmap.insert(hm, k, v)
+    assert bool(jnp.all(ok))
+    hm = hashmap.grow(hm)
+    hm = hashmap.compact(hm)
+    for expect in (1, 2, 3):
+        val, f = hashmap.probe(hm, jnp.asarray([42], jnp.uint32))
+        assert bool(f[0]) and int(val[0]) == expect
+        hm, fd = hashmap.delete(hm, jnp.asarray([42], jnp.uint32))
+        assert bool(fd[0])
+    _, f = hashmap.probe(hm, jnp.asarray([42], jnp.uint32))
+    assert not bool(f[0])
+
+
+def test_tombstone_then_reinsert_then_compact():
+    cfg = _cfg("bitserial")
+    hm = hashmap.create(cfg)
+    keys = np.arange(100, 140, dtype=np.uint32)
+    hm, _ = hashmap.insert(hm, jnp.asarray(keys), jnp.asarray(keys * 2))
+    hm, _ = hashmap.delete(hm, jnp.asarray(keys))
+    assert hashmap.stats(hm)["tombstones"] == 40
+    # re-insert same keys with new values: appended past the tombstones
+    hm, ok = hashmap.insert(hm, jnp.asarray(keys), jnp.asarray(keys * 5))
+    assert bool(jnp.all(ok))
+    assert hashmap.stats(hm)["tombstones"] == 40     # not reused (paper §2.5)
+    hm = hashmap.compact(hm)
+    st = hashmap.stats(hm)
+    assert st["tombstones"] == 0 and st["live_entries"] == 40
+    v, f = hashmap.probe(hm, jnp.asarray(keys))
+    assert bool(jnp.all(f)) and bool(jnp.all(v == jnp.asarray(keys * 5)))
+
+
+def test_arena_exhaustion_triggers_grow():
+    """insert_auto: the PR_ERROR path becomes a resize, no dropped writes."""
+    cfg = HashMemConfig(num_buckets=2, slots_per_page=32, overflow_pages=2,
+                        max_chain=3, backend="ref")  # capacity 128 slots
+    hm = hashmap.create(cfg)
+    keys = np.random.default_rng(5).choice(
+        2**31, 600, replace=False).astype(np.uint32)
+    # plain insert drops writes...
+    _, ok_plain = hashmap.insert(hm, jnp.asarray(keys), jnp.asarray(keys))
+    assert not bool(jnp.all(ok_plain))
+    # ...insert_auto grows instead
+    hm, ok = hashmap.insert_auto(hm, jnp.asarray(keys), jnp.asarray(keys))
+    assert bool(jnp.all(ok))
+    assert hm.config.num_buckets > cfg.num_buckets
+    v, f = hashmap.probe(hm, jnp.asarray(keys))
+    assert bool(jnp.all(f)) and bool(jnp.all(v == jnp.asarray(keys)))
+    st = hashmap.stats(hm)
+    assert st["live_entries"] == 600
+    assert st["max_chain"] <= hm.config.max_chain
+
+
+def test_max_load_factor_proactive_grow():
+    cfg = HashMemConfig(num_buckets=4, slots_per_page=32, overflow_pages=4,
+                        max_chain=4, backend="ref", max_load_factor=0.5)
+    hm = hashmap.create(cfg)                          # capacity 256
+    keys = np.arange(1, 200, dtype=np.uint32)         # 199 > 0.5 * 256
+    hm, ok = hashmap.insert_auto(hm, jnp.asarray(keys), jnp.asarray(keys))
+    assert bool(jnp.all(ok))
+    assert hm.config.num_buckets > 4                  # grew before exhaustion
+    assert hashmap.stats(hm)["load_factor"] <= 0.5
+
+
+def test_sharded_insert_with_synchronized_growth():
+    """RLU channel layer: routed insert, exhaustion grows ALL shards so the
+    stacked pytree stays homogeneous, probes agree afterwards."""
+    from repro.core import rlu
+    num_shards = 2
+    cfg = HashMemConfig(num_buckets=4, slots_per_page=32, overflow_pages=4,
+                        max_chain=3, backend="ref")
+    rng = np.random.default_rng(9)
+    k0 = rng.choice(2**31, 64, replace=False).astype(np.uint32)
+    hm_stacked = rlu.build_sharded(cfg, jnp.asarray(k0), jnp.asarray(k0 * 2),
+                                   num_shards)
+    # way past per-shard capacity (2 shards x 256 slots, minus EMPTY padding)
+    k1 = np.setdiff1d(rng.choice(2**31, 900, replace=False).astype(np.uint32),
+                      k0)
+    hm_stacked, ok, cfg2 = rlu.insert_sharded(
+        hm_stacked, jnp.asarray(k1), jnp.asarray(k1 * 2), cfg, num_shards)
+    assert bool(jnp.all(ok))
+    assert cfg2.num_buckets > cfg.num_buckets
+    # per-shard configs stayed homogeneous; probe every key on its owner
+    import jax
+    owner, _ = rlu.owner_and_local_bucket(jnp.asarray(np.concatenate([k0, k1])),
+                                          cfg2, num_shards)
+    owner = np.asarray(owner)
+    allk = np.concatenate([k0, k1])
+    for d in range(num_shards):
+        hm_d = jax.tree.map(lambda x, d=d: x[d], hm_stacked)
+        assert hm_d.config.num_buckets == cfg2.num_buckets
+        mine = allk[owner == d]
+        v, f = rlu._local_probe(hm_d, jnp.asarray(mine), cfg2, num_shards)
+        assert bool(jnp.all(f))
+        assert bool(jnp.all(v == jnp.asarray(mine * 2)))
+
+
+def test_churn_workload_diff():
+    """Replay a data-layer churn stream (Zipf-skewed mixed ops) through
+    insert_auto + the dict model: the serving-shaped workload, end to end."""
+    from repro.data.kv_synth import churn_workload
+    cfg = HashMemConfig(num_buckets=8, slots_per_page=32, overflow_pages=8,
+                        max_chain=4, backend="ref")
+    hm = hashmap.create(cfg)
+    m = DictModel()
+    for op, ks, vs in churn_workload(80, keyspace=128, seed=21):
+        jk = jnp.asarray(ks)
+        if op == "insert":
+            hm, ok = hashmap.insert_auto(hm, jk, jnp.asarray(vs))
+            assert bool(jnp.all(ok))                 # auto-grow: no drops
+            m.insert(ks, vs, np.asarray(ok))
+        elif op == "delete":
+            hm, f = hashmap.delete(hm, jk)
+            assert (np.asarray(f) == m.delete(ks)).all()
+        else:
+            expv, expf = m.probe(ks)
+            v, f = hashmap.probe(hm, jk)
+            v, f = np.asarray(v), np.asarray(f)
+            expv, expf = np.asarray(expv, np.uint32), np.asarray(expf)
+            assert (f == expf).all()
+            assert (v[expf] == expv[expf]).all()
+    st = hashmap.stats(hm)
+    assert st["live_entries"] == m.live_entries()
+    assert st["max_chain"] <= hm.config.max_chain
+
+
+def test_grow_preserves_probe_on_all_backends():
+    for backend in ("ref", "perf", "area", "bitserial"):
+        cfg = _cfg(backend)
+        rng = np.random.default_rng(13)
+        keys = rng.choice(2**31, 400, replace=False).astype(np.uint32)
+        hm = hashmap.create(cfg)
+        hm, ok = hashmap.insert_auto(hm, jnp.asarray(keys),
+                                     jnp.asarray(keys + 7))
+        assert bool(jnp.all(ok))
+        v, f = hashmap.probe(hm, jnp.asarray(keys))
+        assert bool(jnp.all(f)), backend
+        assert bool(jnp.all(v == jnp.asarray(keys + 7))), backend
