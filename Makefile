@@ -1,7 +1,7 @@
 # Tier-1 verify (ROADMAP.md) — run verbatim.
 PYTHON ?= python
 
-.PHONY: test test-slow bench-kernels
+.PHONY: test test-slow bench-kernels bench-json lint
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) -m pytest -x -q
@@ -13,3 +13,12 @@ test-slow:
 
 bench-kernels:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) benchmarks/kernel_bench.py
+
+# perf trajectory across PRs: writes BENCH_kernels.json (probe + insert/grow)
+bench-json:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) benchmarks/kernel_bench.py --json
+
+# ruff check (config in pyproject.toml); dependency-free fallback when the
+# container has no ruff (no pip installs allowed)
+lint:
+	$(PYTHON) tools/lint.py

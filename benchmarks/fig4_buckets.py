@@ -9,7 +9,6 @@ for both the paper's default-style hash and the murmur3 finisher the paper's
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.configs.base import HashMemConfig
 from repro.core import hashmap

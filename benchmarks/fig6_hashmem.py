@@ -20,7 +20,6 @@ reproduction check; this module computes it, plus:
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import timing_model as tm
 from benchmarks.fig5_cpu_baselines import run as fig5_run

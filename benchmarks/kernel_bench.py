@@ -5,9 +5,15 @@ On-TPU wall-clock is not available in this container; the structural numbers
 (bytes of BlockSpec tiles per grid step, vector ops per probe) come from the
 kernel definitions and are the quantities a Mosaic schedule would be built
 around (see EXPERIMENTS.md §Perf).
+
+``--json`` writes every row to ``BENCH_kernels.json`` (see ``make
+bench-json``) so per-backend probe and insert/grow timings are tracked as a
+trajectory across PRs.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax.numpy as jnp
@@ -20,16 +26,49 @@ VMEM_BYTES = 128 * 1024 * 1024  # v5e VMEM per core
 
 
 def vmem_footprint(slots: int, key_bits: int = 32):
-    """Bytes resident per grid step for each kernel variant."""
-    row = slots * 4                       # uint32 keys
-    vals = slots * 4
+    """Bytes resident per grid step for each kernel variant.
+
+    perf/area fetch ONE interleaved (slots, 2) row per chain step — the
+    unified PageStore activation carrying keys and values together;
+    bitserial's BlockSpec selects only the pool's value lane (its keys live
+    in the plane row)."""
+    row_kv = slots * 2 * 4                # uint32 interleaved key/value row
+    val_lane = slots * 4                  # (1, S, 1) value-lane block
     line = 128 * 4
     planes = key_bits * (slots // 32) * 4
     return {
-        "perf": row + vals + line,
-        "area": row + vals + line,
-        "bitserial": planes + vals + line,
+        "perf": row_kv + line,
+        "area": row_kv + line,
+        "bitserial": planes + val_lane + line,
     }
+
+
+def count_scatters(fn, *args):
+    """Number of scatter primitives in fn's jaxpr (recursing into sub-jaxprs
+    — the structural 'pool scatters per op' the ROADMAP tracks)."""
+    import jax
+
+    n = 0
+
+    def visit(v):
+        if hasattr(v, "jaxpr"):        # ClosedJaxpr
+            walk(v.jaxpr)
+        elif hasattr(v, "eqns"):       # Jaxpr
+            walk(v)
+        elif isinstance(v, (tuple, list)):   # e.g. cond/switch branches
+            for x in v:
+                visit(x)
+
+    def walk(j):
+        nonlocal n
+        for eq in j.eqns:
+            if eq.primitive.name.startswith("scatter"):
+                n += 1
+            for v in eq.params.values():
+                visit(v)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return n
 
 
 def _bench(fn, warmup: int = 2, iters: int = 5) -> float:
@@ -68,6 +107,10 @@ def insert_bench(batches=(4096, 16384), slots: int = 256):
       * jitted — both compiled, isolates the algorithmic win from dispatch
         overhead (smaller ratio: XLA-CPU scatter cost per element is the
         shared floor).
+
+    Each row also reports ``scatters_per_insert``, the pool-scatter count
+    traced from the insert jaxpr: the unified PageStore's fused key/value
+    row write brings it from the split layout's 5 down to 3.
     """
     import jax
 
@@ -84,13 +127,16 @@ def insert_bench(batches=(4096, 16384), slots: int = 256):
         vals = keys * jnp.uint32(3)
 
         def blocked(fn):
-            return lambda: jax.block_until_ready(fn(hm, keys, vals)[0].key_pages)
+            return lambda: jax.block_until_ready(
+                fn(hm, keys, vals)[0].store.pool)
 
         t_vec = _median(blocked(hashmap.insert))
         t_scan = _median(blocked(hashmap.insert_scan))
         tj_vec = _median(blocked(jit_vec))
         tj_scan = _median(blocked(jit_scan))
         rows.append({"name": f"insert_batch{B}",
+                     "scatters_per_insert": count_scatters(hashmap.insert,
+                                                           hm, keys, vals),
                      "vec_us_per_elem": t_vec / B * 1e6,
                      "scan_us_per_elem": t_scan / B * 1e6,
                      "speedup_vs_seed": t_scan / t_vec,
@@ -130,12 +176,9 @@ def run(slots: int = 512, Q: int = 256):
                      "vector_ops_per_probe":
                          {"perf": 2, "area": slots // 128, "bitserial": 32 + 3}[v]})
     # interpret-mode throughput (correctness-path timing only)
-    cfg = HashMemConfig(num_buckets=64, slots_per_page=slots,
-                        overflow_pages=64, max_chain=2, backend="ref")
     rng = np.random.default_rng(0)
     n = 64 * slots // 2
     keys = rng.choice(2**31, n, replace=False).astype(np.uint32)
-    hm = hashmap.build(cfg, jnp.asarray(keys), jnp.asarray(keys))
     q = jnp.asarray(keys[:Q])
     for backend in ("ref", "perf", "area", "bitserial"):
         hm2 = hashmap.build(
@@ -152,6 +195,29 @@ def run(slots: int = 512, Q: int = 256):
     return rows
 
 
-if __name__ == "__main__":
-    for r in run() + insert_bench() + grow_bench():
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="also write all rows to BENCH_kernels.json "
+                         "(perf trajectory tracked across PRs)")
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (implies --json); "
+                         "default BENCH_kernels.json")
+    args = ap.parse_args()
+    if args.out is not None:
+        args.json = True
+    args.out = args.out or "BENCH_kernels.json"
+
+    rows = run() + insert_bench() + grow_bench()
+    for r in rows:
         print(r)
+    if args.json:
+        payload = {"bench": "kernels",
+                   "rows": rows}
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {len(rows)} rows -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,6 @@ All constants from the DDR4_8Gb_3200 column of the JEDEC/DRAMsim3 tables
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 
 from repro.configs.hashmem_paper import DDR4_TIMING as T
 

@@ -248,6 +248,12 @@ class HashMemConfig:
     max_load_factor: float = 0.85    # proactive-grow threshold (live / slots)
     compact_tombstone_frac: float = 0.25  # compact() when tombstones exceed
                                           # this fraction of total slots
+    compact_chain_len: int = 0       # >0: serving-layer compaction also fires
+                                     # when any bucket chain exceeds this many
+                                     # pages while tombstones exist (skewed
+                                     # delete streams pile tombstoned pages on
+                                     # hot chains long before the global
+                                     # tombstone fraction trips)
 
     @property
     def num_pages(self) -> int:

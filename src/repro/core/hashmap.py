@@ -12,6 +12,22 @@ Semantics mirror the paper exactly:
     page list to a backend (ref / area / perf / bitserial — see probe.py and
     kernels/).
 
+Storage layout
+--------------
+The structure is a thin shell around a :class:`repro.core.layout.PageStore`:
+one interleaved ``(num_pages, slots, 2)`` uint32 pool (lane 0 = key,
+lane 1 = value) plus the chain links, fill marks, bit-planes and the
+pim_malloc pointer.  One page == one DRAM row holding keys AND values, so
+
+  * every probe backend reads key and value from the SAME activated row —
+    one page fetch per chain step (the paper's row-buffer semantics), and
+  * every mutation writes key+value with ONE fused pool scatter
+    (``store.write_slots``) instead of the split layout's two.
+
+``hm.key_pages`` / ``hm.val_pages`` / ``hm.planes`` / ``hm.page_next`` /
+``hm.page_fill`` / ``hm.free_top`` remain available as thin views so
+external callers and the differential harness see the same split API.
+
 Everything is a JAX pytree and jit/vmap/pjit-compatible; the structure is
 immutable — every mutation returns a new HashMem.
 
@@ -21,11 +37,12 @@ The online mutation engine extends the paper's populate-once model:
 
   * ``insert`` is VECTORIZED: the whole batch is resolved with the same
     sort/rank/segment machinery as ``build_with_buckets`` and appended to the
-    existing chain tails in one shot.  Within a batch it is equivalent to
-    repeated single inserts in batch order (stable sort keeps intra-bucket
-    batch order; duplicates are all stored, probe returns the oldest).  The
-    original sequential version is kept as ``insert_scan`` (reference
-    semantics + benchmark baseline).
+    existing chain tails in one shot — three pool-shaped scatters total
+    (fused key/value write, fill high-water, chain link).  Within a batch it
+    is equivalent to repeated single inserts in batch order (stable sort
+    keeps intra-bucket batch order; duplicates are all stored, probe returns
+    the oldest).  The original sequential version is kept as ``insert_scan``
+    (reference semantics + benchmark baseline).
   * ``ok=False`` now means the element was NOT stored because pim_malloc
     failed — either the overflow arena is exhausted or appending would push
     the bucket's chain past ``config.max_chain`` (the RLU command-depth
@@ -67,19 +84,38 @@ BucketFn = Callable[[jax.Array, HashMemConfig], jax.Array]
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["key_pages", "val_pages", "planes", "bucket_head",
-                      "page_next", "page_fill", "free_top"],
+         data_fields=["store", "bucket_head"],
          meta_fields=["config"])
 @dataclass
 class HashMem:
-    key_pages: jax.Array          # (num_pages, slots) uint32
-    val_pages: jax.Array          # (num_pages, slots) uint32
-    planes: Optional[jax.Array]   # (num_pages, key_bits, slots//32) uint32 | None
+    store: layout.PageStore       # interleaved pool + page bookkeeping
     bucket_head: jax.Array        # (num_buckets,) int32
-    page_next: jax.Array          # (num_pages,) int32, -1 terminal
-    page_fill: jax.Array          # (num_pages,) int32 (high-water mark incl. tombstones)
-    free_top: jax.Array           # () int32 pim_malloc bump pointer
     config: HashMemConfig
+
+    # -- thin split views (external callers / differential harness) --------
+    @property
+    def key_pages(self) -> jax.Array:      # (num_pages, slots) uint32
+        return self.store.key_pages
+
+    @property
+    def val_pages(self) -> jax.Array:      # (num_pages, slots) uint32
+        return self.store.val_pages
+
+    @property
+    def planes(self) -> Optional[jax.Array]:
+        return self.store.planes
+
+    @property
+    def page_next(self) -> jax.Array:      # (num_pages,) int32, -1 terminal
+        return self.store.page_next
+
+    @property
+    def page_fill(self) -> jax.Array:      # (num_pages,) int32 high-water
+        return self.store.page_fill
+
+    @property
+    def free_top(self) -> jax.Array:       # () int32 pim_malloc bump pointer
+        return self.store.free_top
 
 
 def _keep_planes(cfg: HashMemConfig) -> bool:
@@ -88,16 +124,13 @@ def _keep_planes(cfg: HashMemConfig) -> bool:
 
 def create(cfg: HashMemConfig) -> HashMem:
     """Empty HashMem: every bucket pre-owns its direct page (paper §2.4)."""
-    keys, vals = layout.empty_pool(cfg.num_pages, cfg.slots_per_page)
-    planes = layout.pack_bitplanes(keys, cfg.key_bits) if _keep_planes(cfg) else None
+    store = layout.empty_store(cfg.num_pages, cfg.slots_per_page,
+                               cfg.key_bits, with_planes=_keep_planes(cfg))
+    store = dataclasses.replace(
+        store, free_top=jnp.asarray(cfg.num_buckets, dtype=I32))
     return HashMem(
-        key_pages=keys,
-        val_pages=vals,
-        planes=planes,
+        store=store,
         bucket_head=jnp.arange(cfg.num_buckets, dtype=I32),
-        page_next=jnp.full((cfg.num_pages,), -1, dtype=I32),
-        page_fill=jnp.zeros((cfg.num_pages,), dtype=I32),
-        free_top=jnp.asarray(cfg.num_buckets, dtype=I32),
         config=cfg,
     )
 
@@ -154,9 +187,8 @@ def _scatter_build(cfg: HashMemConfig, keys: jax.Array, vals: jax.Array,
                      cfg.num_buckets + over_off[ob] + depth - 1)
     page = jnp.where(dropped, cfg.num_pages, page).astype(I32)             # OOB -> dropped
 
-    key_pages, val_pages = layout.empty_pool(cfg.num_pages, cfg_slots)
-    key_pages = key_pages.at[page, slot].set(ks, mode="drop")
-    val_pages = val_pages.at[page, slot].set(vs, mode="drop")
+    pool = layout.empty_pool(cfg.num_pages, cfg_slots)
+    pool = pool.at[page, slot].set(jnp.stack([ks, vs], axis=-1), mode="drop")
     page_fill = jnp.zeros((cfg.num_pages,), I32).at[page].max(slot + 1,
                                                               mode="drop")
 
@@ -168,12 +200,16 @@ def _scatter_build(cfg: HashMemConfig, keys: jax.Array, vals: jax.Array,
     page_next = jnp.full((cfg.num_pages,), -1, I32).at[link_idx].set(page, mode="drop")
 
     free_top = cfg.num_buckets + jnp.sum(n_over)
-    planes = layout.pack_bitplanes(key_pages, cfg.key_bits) if _keep_planes(cfg) else None
+    planes = layout.pack_bitplanes(pool[..., layout.KEY_LANE], cfg.key_bits) \
+        if _keep_planes(cfg) else None
 
-    return HashMem(key_pages=key_pages, val_pages=val_pages, planes=planes,
+    store = layout.PageStore(pool=pool, planes=planes, page_next=page_next,
+                             page_fill=page_fill,
+                             free_top=free_top.astype(I32),
+                             key_bits=cfg.key_bits)
+    return HashMem(store=store,
                    bucket_head=jnp.arange(cfg.num_buckets, dtype=I32),
-                   page_next=page_next, page_fill=page_fill,
-                   free_top=free_top.astype(I32), config=cfg)
+                   config=cfg)
 
 
 def _fit_report(counts, cfg: HashMemConfig) -> dict:
@@ -224,6 +260,26 @@ def resolve_pages_by_bucket(hm: HashMem, b: jax.Array) -> jax.Array:
         cols.append(nxt)
         page = nxt
     return jnp.stack(cols, axis=1).astype(I32)
+
+
+def chain_lengths(hm: HashMem) -> jax.Array:
+    """(num_buckets,) int32 chain lengths via a bounded vectorized walk.
+
+    Walks one step past ``config.max_chain`` so an over-long chain (an
+    invariant violation) is visible as a length of max_chain + 1.
+    """
+    cfg = hm.config
+    p = hm.bucket_head
+    clen = (p >= 0).astype(I32)
+    for _ in range(cfg.max_chain):
+        p = jnp.where(p >= 0, hm.page_next[jnp.maximum(p, 0)], -1)
+        clen = clen + (p >= 0).astype(I32)
+    return clen
+
+
+def max_chain_len(hm: HashMem) -> int:
+    """Longest bucket chain, in pages (the per-probe RLU command depth)."""
+    return int(jnp.max(chain_lengths(hm)))
 
 
 # ---------------------------------------------------------------------------
@@ -277,7 +333,12 @@ def insert(hm: HashMem, keys: jax.Array, vals: jax.Array):
 
 def insert_with_buckets(hm: HashMem, keys: jax.Array, vals: jax.Array,
                         b: jax.Array):
-    """``insert`` with caller-supplied bucket ids (RLU channel layer)."""
+    """``insert`` with caller-supplied bucket ids (RLU channel layer).
+
+    Three pool-shaped scatters total: the fused key/value row write
+    (store.write_slots), the fill high-water max, and the chain-link set;
+    the per-element ok mask is un-permuted with a gather, not a scatter.
+    """
     cfg = hm.config
     slots = cfg.slots_per_page
     n = keys.shape[0]
@@ -313,27 +374,22 @@ def insert_with_buckets(hm: HashMem, keys: jax.Array, vals: jax.Array,
     page = jnp.where(depth == 0, tails, new_id).astype(I32)
     wp = jnp.where(ok, page, cfg.num_pages)                # OOB drop if !ok
 
-    key_pages = hm.key_pages.at[wp, slot].set(ks, mode="drop")
-    val_pages = hm.val_pages.at[wp, slot].set(vs, mode="drop")
-    page_fill = hm.page_fill.at[wp].max(slot + 1, mode="drop")
+    store = hm.store.write_slots(wp, slot, ks, vs)         # fused k+v scatter
+    page_fill = store.page_fill.at[wp].max(slot + 1, mode="drop")
 
     # chain links: first element on each newly allocated page links prev -> page
     is_link = ok & (depth >= 1) & (slot == 0)
     prev = jnp.where(depth == 1, tails, page - 1)
     link_idx = jnp.where(is_link, prev, cfg.num_pages)
-    page_next = hm.page_next.at[link_idx].set(page, mode="drop")
+    page_next = store.page_next.at[link_idx].set(page, mode="drop")
 
-    planes = hm.planes
-    if planes is not None:
-        planes = layout.update_bitplanes_batch(planes, wp, slot, ks,
-                                               cfg.key_bits)
+    store = dataclasses.replace(
+        store, page_fill=page_fill, page_next=page_next,
+        free_top=(hm.free_top + n_fit).astype(I32))
 
-    ok_orig = jnp.zeros((n,), bool).at[order].set(ok)
-    new = HashMem(key_pages=key_pages, val_pages=val_pages, planes=planes,
-                  bucket_head=hm.bucket_head, page_next=page_next,
-                  page_fill=page_fill,
-                  free_top=(hm.free_top + n_fit).astype(I32), config=cfg)
-    return new, ok_orig
+    ok_orig = ok[jnp.argsort(order)]            # inverse permutation (gather)
+    return HashMem(store=store, bucket_head=hm.bucket_head,
+                   config=cfg), ok_orig
 
 
 def insert_scan(hm: HashMem, keys: jax.Array, vals: jax.Array):
@@ -347,7 +403,7 @@ def insert_scan(hm: HashMem, keys: jax.Array, vals: jax.Array):
     slots = cfg.slots_per_page
 
     def step(state, kv):
-        key_pages, val_pages, planes, page_next, page_fill, free_top = state
+        pool, planes, page_next, page_fill, free_top = state
         k, v = kv
         b = hash_to_bucket(k[None], cfg.num_buckets, cfg.hash_fn, cfg.salt)[0]
         # walk to chain tail (bounded)
@@ -362,8 +418,7 @@ def insert_scan(hm: HashMem, keys: jax.Array, vals: jax.Array):
         tp = jnp.where(need_new, new_page, last).astype(I32)
         ts = jnp.where(need_new, 0, fill).astype(I32)
         wp = jnp.where(ok, tp, cfg.num_pages)                              # OOB drop if !ok
-        key_pages = key_pages.at[wp, ts].set(k, mode="drop")
-        val_pages = val_pages.at[wp, ts].set(v, mode="drop")
+        pool = pool.at[wp, ts].set(jnp.stack([k, v]), mode="drop")  # fused k+v
         if planes is not None:
             planes = jnp.where(ok, _write_key_bits(planes, tp, ts, k, cfg.key_bits), planes)
         page_fill = page_fill.at[wp].set(ts + 1, mode="drop")
@@ -371,22 +426,22 @@ def insert_scan(hm: HashMem, keys: jax.Array, vals: jax.Array):
         page_next = page_next.at[jnp.where(do_link, last, cfg.num_pages)].set(
             new_page, mode="drop")
         free_top = free_top + do_link.astype(I32)
-        return (key_pages, val_pages, planes, page_next, page_fill, free_top), ok
+        return (pool, planes, page_next, page_fill, free_top), ok
 
-    init = (hm.key_pages, hm.val_pages, hm.planes, hm.page_next, hm.page_fill,
-            hm.free_top)
-    (kp, vp, pl, pn, pf, ft), oks = jax.lax.scan(
+    init = (hm.store.pool, hm.planes, hm.page_next, hm.page_fill, hm.free_top)
+    (pool, pl, pn, pf, ft), oks = jax.lax.scan(
         step, init, (keys.astype(U32), vals.astype(U32)))
-    new = HashMem(key_pages=kp, val_pages=vp, planes=pl,
-                  bucket_head=hm.bucket_head, page_next=pn, page_fill=pf,
-                  free_top=ft, config=cfg)
-    return new, oks
+    store = layout.PageStore(pool=pool, planes=pl, page_next=pn, page_fill=pf,
+                             free_top=ft, key_bits=cfg.key_bits)
+    return HashMem(store=store, bucket_head=hm.bucket_head, config=cfg), oks
 
 
 def delete(hm: HashMem, keys: jax.Array):
     """Batched tombstone delete (paper §2.5).  Returns (new_hm, found).
     Each query tombstones the FIRST chain-order match of its key; duplicate
-    queries in one batch resolve to the same slot (one removal)."""
+    queries in one batch resolve to the same slot (one removal).  Only the
+    key lane of the row is rewritten — the value is the paper's "wasted
+    space" until compact()."""
     cfg = hm.config
     slots = cfg.slots_per_page
     q = keys.astype(U32)
@@ -400,9 +455,8 @@ def delete(hm: HashMem, keys: jax.Array):
     c, s = idx // slots, (idx % slots).astype(I32)
     pg = pages[jnp.arange(qn), c]
     wp = jnp.where(found, pg, cfg.num_pages)                               # OOB drop
-    key_pages = hm.key_pages.at[wp, s].set(TOMBSTONE_KEY, mode="drop")
-    planes = hm.planes
-    if planes is not None and qn > 0:
+    plane_pages = None
+    if hm.planes is not None and qn > 0:
         # dedup identical (page, slot) targets (duplicate queries) so the
         # batched bit-plane scatter adds each bit exactly once
         flatidx = jnp.where(found, pg * slots + s, -1)
@@ -410,13 +464,11 @@ def delete(hm: HashMem, keys: jax.Array):
         fs = flatidx[o]
         first = jnp.concatenate([jnp.ones((1,), bool), fs[1:] != fs[:-1]])
         uniq = jnp.zeros((qn,), bool).at[o].set(first)
-        upd = jnp.where(found & uniq, pg, cfg.num_pages)
-        planes = layout.update_bitplanes_batch(
-            planes, upd, s, jnp.full((qn,), TOMBSTONE_KEY, U32), cfg.key_bits)
-    new = HashMem(key_pages=key_pages, val_pages=hm.val_pages, planes=planes,
-                  bucket_head=hm.bucket_head, page_next=hm.page_next,
-                  page_fill=hm.page_fill, free_top=hm.free_top, config=cfg)
-    return new, found
+        plane_pages = jnp.where(found & uniq, pg, cfg.num_pages)
+    store = hm.store.write_keys(wp, s, jnp.full((qn,), TOMBSTONE_KEY, U32),
+                                plane_pages=plane_pages)
+    return HashMem(store=store, bucket_head=hm.bucket_head,
+                   config=cfg), found
 
 
 # ---------------------------------------------------------------------------
@@ -441,10 +493,12 @@ def _rebuild(hm: HashMem, new_cfg: HashMemConfig,
 
     Flat (page-major) slot order IS chain order per bucket (page ids increase
     along every chain), so same-key duplicates keep their relative order —
-    probe/delete semantics survive the rebuild.
+    probe/delete semantics survive the rebuild.  The interleaved pool makes
+    this one reshape: rows flatten to (P*S, 2) key/value pairs directly.
     """
-    keys = hm.key_pages.reshape(-1)
-    vals = hm.val_pages.reshape(-1)
+    flat = hm.store.pool.reshape(-1, 2)
+    keys = flat[:, layout.KEY_LANE]
+    vals = flat[:, layout.VAL_LANE]
     live = (keys != EMPTY_KEY) & (keys != TOMBSTONE_KEY)
     if bucket_fn is None:
         b = hash_to_bucket(keys, new_cfg.num_buckets, new_cfg.hash_fn,
@@ -543,16 +597,8 @@ def stats(hm: HashMem) -> dict:
     cfg = hm.config
     kp = np.asarray(hm.key_pages)
     fill = np.asarray(hm.page_fill)
-    nxt = np.asarray(hm.page_next)
     live = (kp != np.uint32(0xFFFFFFFF)) & (kp != np.uint32(0xFFFFFFFE))
-    chain_len = np.zeros(cfg.num_buckets, np.int32)
-    head = np.asarray(hm.bucket_head)
-    for bkt in range(cfg.num_buckets):
-        p, n_ = head[bkt], 0
-        while p >= 0 and n_ <= cfg.max_chain:
-            n_ += 1
-            p = nxt[p]
-        chain_len[bkt] = n_
+    chain_len = np.asarray(chain_lengths(hm))
     cap = cfg.num_pages * cfg.slots_per_page
     return {
         "live_entries": int(live.sum()),

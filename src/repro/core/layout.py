@@ -1,10 +1,24 @@
-"""Bucket-per-row page layout + bit-plane packing (paper §2, §2.2).
+"""Unified PageStore: interleaved bucket-row layout + bit-plane packing
+(paper §2, §2.2, §2.4).
 
-The HashMem pool mirrors the paper's DRAM organization:
+The HashMem pool mirrors the paper's DRAM organization, where ONE row
+activation exposes an entire bucket segment — keys *and* values — to the
+subarray compare units:
 
-  * page  == one subarray row: ``slots`` columns of key/value pairs.
-    Opening a page (loading its row into VMEM) exposes the whole bucket
-    segment to the comparison units, exactly like a DRAM row activation.
+  * page  == one subarray row: ``slots`` columns of interleaved key/value
+    pairs, stored as a single ``(num_pages, slots, 2)`` uint32 array
+    (lane 0 = key, lane 1 = value).  Opening a page (loading its row into
+    VMEM) exposes the whole bucket segment in ONE fetch, exactly like a
+    DRAM row activation — probes read the key AND its value from the same
+    activated row, and mutations write both with a single fused scatter
+    (``PageStore.write_slots``).  IcebergHT/Dash make the same argument for
+    PM: co-locating a bucket's keys and payloads in one access unit is what
+    makes probes single-access.
+  * ``PageStore`` owns the pool plus all per-page bookkeeping: the optional
+    column-oriented bit-planes, the overflow chain links (``page_next``),
+    the per-page fill high-water marks and the ``pim_malloc`` bump pointer
+    (``free_top``).  ``key_pages``/``val_pages`` remain available as thin
+    lane views for callers that want the split layout.
   * The performance-optimized version stores keys **column-oriented as bit
     slices** (paper: "each row contains a single-bit slice from thousands of
     values").  ``pack_bitplanes`` produces that layout: plane j, word w holds
@@ -13,19 +27,127 @@ The HashMem pool mirrors the paper's DRAM organization:
 """
 from __future__ import annotations
 
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
 from repro.core.hashing import EMPTY_KEY
 
 U32 = jnp.uint32
+I32 = jnp.int32
+
+KEY_LANE = 0
+VAL_LANE = 1
 
 
-def empty_pool(num_pages: int, slots: int):
-    """Key/value page pools initialized to EMPTY."""
-    keys = jnp.full((num_pages, slots), EMPTY_KEY, dtype=U32)
-    vals = jnp.zeros((num_pages, slots), dtype=U32)
-    return keys, vals
+# ---------------------------------------------------------------------------
+# PageStore: the one owner of the interleaved pool + page bookkeeping
+# ---------------------------------------------------------------------------
 
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["pool", "planes", "page_next", "page_fill", "free_top"],
+         meta_fields=["key_bits"])
+@dataclass
+class PageStore:
+    """Interleaved page pool + per-page bookkeeping (one pytree).
+
+    ``pool[p, s, KEY_LANE]`` is the key at slot s of page p and
+    ``pool[p, s, VAL_LANE]`` its value — one row activation serves both.
+    All mutations flow through ``write_slots`` (fused key+value scatter,
+    keeping the bit-planes in sync) or the dedicated tombstone/link helpers.
+    """
+
+    pool: jax.Array               # (num_pages, slots, 2) uint32
+    planes: Optional[jax.Array]   # (num_pages, key_bits, slots//32) | None
+    page_next: jax.Array          # (num_pages,) int32, -1 terminal
+    page_fill: jax.Array          # (num_pages,) int32 fill high-water mark
+    free_top: jax.Array           # () int32 pim_malloc bump pointer
+    key_bits: int                 # static: width of the bit-plane scan
+
+    # -- thin split views (external callers / differential harness) --------
+    @property
+    def key_pages(self) -> jax.Array:
+        return self.pool[..., KEY_LANE]
+
+    @property
+    def val_pages(self) -> jax.Array:
+        return self.pool[..., VAL_LANE]
+
+    @property
+    def num_pages(self) -> int:
+        return self.pool.shape[0]
+
+    @property
+    def slots(self) -> int:
+        return self.pool.shape[1]
+
+    # -- the fused write path ----------------------------------------------
+    def write_slots(self, pages, slots_idx, keys, vals) -> "PageStore":
+        """ONE pool scatter writes key and value into the same activated
+        rows (out-of-range page => dropped, ``mode="drop"``); the bit-planes
+        are maintained incrementally when present.  In-range (page, slot)
+        pairs must be unique within the batch (bit-plane merge is additive).
+        """
+        kv = jnp.stack([keys.astype(U32), vals.astype(U32)], axis=-1)
+        pool = self.pool.at[pages, slots_idx].set(kv, mode="drop")
+        planes = self.planes
+        if planes is not None:
+            planes = update_bitplanes_batch(planes, pages, slots_idx,
+                                            keys.astype(U32), self.key_bits)
+        return dataclasses.replace(self, pool=pool, planes=planes)
+
+    def write_keys(self, pages, slots_idx, keys,
+                   plane_pages=None) -> "PageStore":
+        """Key-lane-only scatter (tombstone writes): the value lane of the
+        row is left untouched.  ``plane_pages`` optionally overrides the
+        page ids used for the bit-plane update (delete dedups duplicate
+        targets there)."""
+        pool = self.pool.at[pages, slots_idx, KEY_LANE].set(
+            keys.astype(U32), mode="drop")
+        planes = self.planes
+        if planes is not None:
+            pp = pages if plane_pages is None else plane_pages
+            planes = update_bitplanes_batch(planes, pp, slots_idx,
+                                            keys.astype(U32), self.key_bits)
+        return dataclasses.replace(self, pool=pool, planes=planes)
+
+def empty_store(num_pages: int, slots: int, key_bits: int = 32,
+                with_planes: bool = False) -> PageStore:
+    """Fresh PageStore: every key EMPTY, every value 0, no chains."""
+    pool = empty_pool(num_pages, slots)
+    planes = pack_bitplanes(pool[..., KEY_LANE], key_bits) if with_planes \
+        else None
+    return PageStore(
+        pool=pool,
+        planes=planes,
+        page_next=jnp.full((num_pages,), -1, dtype=I32),
+        page_fill=jnp.zeros((num_pages,), dtype=I32),
+        free_top=jnp.asarray(0, dtype=I32),
+        key_bits=key_bits,
+    )
+
+
+def empty_pool(num_pages: int, slots: int) -> jax.Array:
+    """(num_pages, slots, 2) interleaved pool: keys EMPTY, values 0.
+
+    Built by broadcast (not a strided lane scatter) so bulk builds spend
+    their scatter budget only on real writes."""
+    row = jnp.array([EMPTY_KEY, 0], dtype=U32)
+    return jnp.broadcast_to(row, (num_pages, slots, 2))
+
+
+def interleave(key_pages, val_pages) -> jax.Array:
+    """Zip split (P, S) key/value arrays into the (P, S, 2) pool layout."""
+    return jnp.stack([key_pages.astype(U32), val_pages.astype(U32)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane packing (the paper's column-oriented key layout)
+# ---------------------------------------------------------------------------
 
 def pack_bitplanes(key_pages, key_bits: int):
     """(P, S) uint32 keys -> (P, key_bits, S//32) uint32 bit-planes.
@@ -48,7 +170,7 @@ def update_bitplanes_batch(planes, pages, slots_idx, new_keys, key_bits: int):
 
     ``pages``/``slots_idx`` (B,) int32 name the written slots (out-of-range
     page => the update is dropped, matching ``.at[...].set(mode="drop")`` on
-    the key pages); ``new_keys`` (B,) uint32 are the values written there.
+    the key lane); ``new_keys`` (B,) uint32 are the values written there.
     Each in-range (page, slot) pair must be unique within the batch: bits are
     merged with scatter-adds, which only act as OR when every added bit is
     distinct.

@@ -25,12 +25,11 @@ Inside jit, the resolved block table (the RLU command stream) is a dense
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.core import compat
 
@@ -206,9 +205,13 @@ class PageTableManager:
     """
 
     MAX_BLOCKS = 1 << 12
+    CHAIN_CHECK_EVERY = 4   # frees between compact_chain_len device walks
 
     def __init__(self, total_pages: int, num_channels: int = 1,
-                 num_groups: int = 1, hashmem_cfg=None, backend: str = "ref"):
+                 num_groups: int = 1, hashmem_cfg=None, backend: str = "ref",
+                 compact_chain_len: int | None = None):
+        import dataclasses
+
         from repro.configs.base import HashMemConfig
         from repro.core import hashmap
 
@@ -222,6 +225,8 @@ class PageTableManager:
             num_buckets=max(64, total_pages // 4), slots_per_page=128,
             overflow_pages=max(64, total_pages // 8), max_chain=8,
             backend=backend)
+        if compact_chain_len is not None:
+            cfg = dataclasses.replace(cfg, compact_chain_len=compact_chain_len)
         self.cfg = cfg
         self.hm = hashmap.create(cfg)
         self.free = [list(range(c * self.pps, (c + 1) * self.pps))[::-1]
@@ -230,6 +235,7 @@ class PageTableManager:
         self.grow_events = 0
         self.compact_events = 0
         self._tombstones = 0        # host-side count; avoids device syncs
+        self._frees_since_chain_check = 0   # throttles the device chain walk
 
     def _key(self, seq_id: int, block: int) -> int:
         assert block < self.MAX_BLOCKS
@@ -298,16 +304,34 @@ class PageTableManager:
         self.maybe_compact()
 
     def maybe_compact(self):
-        """Reclaim tombstoned page-table slots once they pass the configured
-        fraction of capacity (long-lived serving would otherwise grow chains
-        without bound — the paper's §2.5 'wasted space')."""
+        """Reclaim tombstoned page-table slots (the paper's §2.5 'wasted
+        space') on either of two triggers:
+
+          * GLOBAL: tombstones exceed ``compact_tombstone_frac`` of capacity
+            (long-lived serving would otherwise grow chains without bound);
+          * CHAIN (``compact_chain_len`` > 0): any bucket chain exceeds that
+            many pages while tombstones exist.  Skewed delete streams pile
+            tombstoned pages onto a few hot chains — per-probe RLU command
+            depth degrades long before the global fraction trips.  The chain
+            walk is a device computation + host sync, so it is throttled to
+            every ``CHAIN_CHECK_EVERY`` frees (tombstone counting stays pure
+            host-side, see __init__).
+        """
         from repro.core import hashmap
         cfg = self.hm.config
         cap = cfg.num_pages * cfg.slots_per_page
-        if self._tombstones > cfg.compact_tombstone_frac * cap:
+        trigger = self._tombstones > cfg.compact_tombstone_frac * cap
+        if (not trigger and cfg.compact_chain_len > 0
+                and self._tombstones > 0):
+            self._frees_since_chain_check += 1
+            if self._frees_since_chain_check >= self.CHAIN_CHECK_EVERY:
+                self._frees_since_chain_check = 0
+                trigger = hashmap.max_chain_len(self.hm) > cfg.compact_chain_len
+        if trigger:
             self.hm = hashmap.compact(self.hm)
             self.compact_events += 1
             self._tombstones = 0
+            self._frees_since_chain_check = 0
 
     def live_pages(self) -> int:
         return sum(len(v) for v in self.owned.values())

@@ -1,7 +1,9 @@
-"""Backend dispatch for HashMem probes (ref / area / perf / bitserial)."""
-from __future__ import annotations
+"""Backend dispatch for HashMem probes (ref / area / perf / bitserial).
 
-import jax.numpy as jnp
+Every backend consumes the unified PageStore's interleaved (P, S, 2) pool:
+one activated row per chain step carries the keys to compare AND the value
+to return (paper §2.2/§2.4 row-buffer semantics)."""
+from __future__ import annotations
 
 from repro.kernels import ops
 from repro.kernels import ref as kref
@@ -9,15 +11,16 @@ from repro.kernels import ref as kref
 
 def probe_pages(hm, queries, pages, backend: str):
     """Dispatch a resolved probe (RLU command stream) to a compare backend."""
+    pool = hm.store.pool
     if backend == "ref":
-        return kref.probe_pages_ref(hm.key_pages, hm.val_pages, queries, pages)
+        return kref.probe_pages_ref(pool, queries, pages)
     if backend == "perf":
-        return ops.probe_perf(hm.key_pages, hm.val_pages, queries, pages)
+        return ops.probe_perf(pool, queries, pages)
     if backend == "area":
-        return ops.probe_area(hm.key_pages, hm.val_pages, queries, pages)
+        return ops.probe_area(pool, queries, pages)
     if backend == "bitserial":
         if hm.planes is None:
             raise ValueError("bitserial backend requires planes (backend='bitserial' at build)")
-        return ops.probe_bitserial(hm.planes, hm.val_pages, queries, pages,
+        return ops.probe_bitserial(hm.planes, pool, queries, pages,
                                    key_bits=hm.config.key_bits)
     raise ValueError(f"unknown probe backend {backend!r}")

@@ -14,10 +14,14 @@ enable the parallel probing of pages".  One global hash h(key) defines
 Probes are routed to owners with ``all_to_all``, probed locally with the
 configured kernel backend, and routed back — the TPU ICI plays the role of
 the paper's memory-channel fan-out.
+
+Every shard is a full HashMem over the unified PageStore (one interleaved
+(P, S, 2) pool pytree per shard), so stacking shards for the mesh, the
+synchronized-growth insert path and the local kernel probes all move ONE
+pool leaf per shard instead of split key/value pairs.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

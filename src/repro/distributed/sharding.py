@@ -9,7 +9,6 @@ does not divide the mesh-axis product — e.g. whisper-tiny's 6 heads on a
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import numpy as np

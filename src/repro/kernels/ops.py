@@ -1,11 +1,12 @@
 """jit'd wrappers for the HashMem probe kernels.
 
-``interpret`` defaults to True off-TPU (this container validates the kernel
-bodies in interpret mode; on a real v5e the same calls lower to Mosaic).
+All probe entry points take the unified PageStore's interleaved (P, S, 2)
+pool — one page fetch per chain step serves both the key compare and the
+value readout.  ``interpret`` defaults to True off-TPU (this container
+validates the kernel bodies in interpret mode; on a real v5e the same calls
+lower to Mosaic).
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 
@@ -20,9 +21,9 @@ __all__ = [
     "bitplane_update", "bitplane_rebuild",
 ]
 
-probe_perf = jax.jit(partial(probe_pages_perf))
-probe_area = jax.jit(partial(probe_pages_area))
-probe_bitserial = jax.jit(partial(probe_pages_bitserial), static_argnames=("key_bits",))
+probe_perf = jax.jit(probe_pages_perf)
+probe_area = jax.jit(probe_pages_area)
+probe_bitserial = jax.jit(probe_pages_bitserial, static_argnames=("key_bits",))
 probe_ref = jax.jit(ref.probe_pages_ref)
 probe_bitplanes_ref = jax.jit(ref.probe_bitplanes_ref, static_argnames=("key_bits",))
 

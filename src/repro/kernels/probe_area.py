@@ -6,11 +6,14 @@ keys latched into the output register.
 
 TPU adaptation (DESIGN.md §2): a TPU has no efficient scalar element walk
 over VMEM; the closest faithful analogue is *strip-serial*: a fori_loop
-steps through the row one (1,128)-lane strip at a time, performing a single
+steps through the row one 128-lane strip at a time, performing a single
 compare per step and latching the first match — serial at strip granularity
 (the "one comparator" is one VPU issue slot per step), versus probe_perf
-which consumes the whole row at once.  This preserves the paper's
-area/perf contrast: same I/O, serialized compare schedule.
+which consumes the whole row at once.  The activated row is the interleaved
+(slots, 2) key/value segment of the unified PageStore — ONE BlockSpec fetch
+per chain step; each strip compares the key lane and latches the matching
+value lane of the SAME row.  This preserves the paper's area/perf contrast:
+same single-activation I/O, serialized compare schedule.
 
 Same grid/O contract as probe_perf.
 """
@@ -27,7 +30,7 @@ STRIP = 128
 
 
 def _make_kernel(strip: int):
-    def _kernel(pages_ref, queries_ref, keys_ref, vals_ref, out_ref):
+    def _kernel(pages_ref, queries_ref, pool_ref, out_ref):
         c = pl.program_id(1)
         q = pl.program_id(0)
 
@@ -38,13 +41,16 @@ def _make_kernel(strip: int):
         page = pages_ref[q, c]
         query = queries_ref[q]
         valid = page >= 0
-        S = keys_ref.shape[1]
+        kv = pool_ref[...]                                   # (1, S, 2): one activation
+        keys_row = kv[0, :, 0]                               # (S,) uint32
+        vals_row = kv[0, :, 1]
+        S = keys_row.shape[0]
         n_strips = S // strip
 
         def body(i, carry):
             found, val, slot = carry
-            krow = keys_ref[0, pl.dslice(i * strip, strip)]     # (strip,) uint32
-            vrow = vals_ref[0, pl.dslice(i * strip, strip)]
+            krow = jax.lax.dynamic_slice_in_dim(keys_row, i * strip, strip)
+            vrow = jax.lax.dynamic_slice_in_dim(vals_row, i * strip, strip)
             match = (krow == query) & valid
             any_m = jnp.any(match)
             iota = jax.lax.broadcasted_iota(jnp.int32, (strip,), 0)
@@ -70,11 +76,11 @@ def _make_kernel(strip: int):
     return _kernel
 
 
-def probe_pages_area(key_pages, val_pages, queries, pages, *, interpret=None):
+def probe_pages_area(pool, queries, pages, *, interpret=None):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     qn, C = pages.shape
-    P, S = key_pages.shape
+    P, S, _ = pool.shape
     # full lane strips on real shapes; small test pages fall back to one strip
     strip = min(STRIP, S)
     assert S % strip == 0, "slots must be a multiple of the strip width"
@@ -83,8 +89,7 @@ def probe_pages_area(key_pages, val_pages, queries, pages, *, interpret=None):
         num_scalar_prefetch=2,
         grid=(qn, C),
         in_specs=[
-            pl.BlockSpec((1, S), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0)),
-            pl.BlockSpec((1, S), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0)),
+            pl.BlockSpec((1, S, 2), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, LINE), lambda q, c, pages, queries: (q, 0)),
     )
@@ -93,5 +98,5 @@ def probe_pages_area(key_pages, val_pages, queries, pages, *, interpret=None):
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((qn, LINE), U32),
         interpret=interpret,
-    )(pages.astype(jnp.int32), queries.astype(U32), key_pages, val_pages)
+    )(pages.astype(jnp.int32), queries.astype(U32), pool)
     return out[:, 0], out[:, 1] > 0

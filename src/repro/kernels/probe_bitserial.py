@@ -8,13 +8,19 @@ values"; comparison proceeds one bit-plane per step — b steps for b-bit keys
 TPU adaptation (DESIGN.md §2): bit-planes are packed 32-slots-per-uint32-word
 (layout.pack_bitplanes); the per-bit step is a single vector XOR+OR over the
 word lanes, so one grid step performs `key_bits` vector ops regardless of the
-number of slots — exactly the paper's b-cycle CAM scan.  On TPU this wins
-over probe_perf only for sub-32-bit keys (b = 4/8/16, the paper's column
-widths); at b=32 the bit-parallel compare of probe_perf is strictly better.
-The benchmark harness quantifies that crossover (EXPERIMENTS.md §Perf).
+number of slots — exactly the paper's b-cycle CAM scan.  The value readout
+comes from the unified PageStore's interleaved page row, but the BlockSpec
+selects ONLY its value lane ((1, S, 1) block at lane index 1) — the
+bit-serial layout keeps keys column-oriented, so the plane row IS the key
+activation and fetching the pool's key lane too would double the per-step
+row traffic for bytes the kernel never reads.  On TPU
+this wins over probe_perf only for sub-32-bit keys (b = 4/8/16, the paper's
+column widths); at b=32 the bit-parallel compare of probe_perf is strictly
+better.  The benchmark harness quantifies that crossover (EXPERIMENTS.md
+§Perf).
 
-I/O: planes (P, b, W=S//32) u32 bit-planes, val_pages (P, S) u32,
-queries (Q,) u32, pages (Q, C) i32.  Output cache line as probe_perf.
+I/O: planes (P, b, W=S//32) u32 bit-planes, pool (P, S, 2) u32 interleaved
+pages, queries (Q,) u32, pages (Q, C) i32.  Output cache line as probe_perf.
 """
 from __future__ import annotations
 
@@ -28,7 +34,7 @@ LINE = 128
 
 
 def _make_kernel(key_bits: int):
-    def _kernel(pages_ref, queries_ref, planes_ref, vals_ref, out_ref):
+    def _kernel(pages_ref, queries_ref, planes_ref, pool_ref, out_ref):
         c = pl.program_id(1)
         q = pl.program_id(0)
 
@@ -60,7 +66,8 @@ def _make_kernel(key_bits: int):
         slot_iota = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
         slot = jnp.min(jnp.where(match, slot_iota, jnp.int32(2**30)))
         onehot = (slot_iota == slot) & match
-        val = jnp.max(jnp.where(onehot, vals_ref[...], U32(0)))
+        vals_row = pool_ref[...].reshape(1, S)               # value lane only
+        val = jnp.max(jnp.where(onehot, vals_row, U32(0)))
 
         already = out_ref[0, 1] > U32(0)
 
@@ -74,14 +81,14 @@ def _make_kernel(key_bits: int):
     return _kernel
 
 
-def probe_pages_bitserial(planes, val_pages, queries, pages, key_bits: int,
+def probe_pages_bitserial(planes, pool, queries, pages, key_bits: int,
                           *, interpret=None):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     qn, C = pages.shape
     P, b, W = planes.shape
     assert b == key_bits
-    S = val_pages.shape[1]
+    S = pool.shape[1]
     assert S == W * 32
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -89,7 +96,8 @@ def probe_pages_bitserial(planes, val_pages, queries, pages, key_bits: int,
         grid=(qn, C),
         in_specs=[
             pl.BlockSpec((1, b, W), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0, 0)),
-            pl.BlockSpec((1, S), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0)),
+            # value lane only: block index 1 in the size-1 trailing dim
+            pl.BlockSpec((1, S, 1), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0, 1)),
         ],
         out_specs=pl.BlockSpec((1, LINE), lambda q, c, pages, queries: (q, 0)),
     )
@@ -98,5 +106,5 @@ def probe_pages_bitserial(planes, val_pages, queries, pages, key_bits: int,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((qn, LINE), U32),
         interpret=interpret,
-    )(pages.astype(jnp.int32), queries.astype(U32), planes, val_pages)
+    )(pages.astype(jnp.int32), queries.astype(U32), planes, pool)
     return out[:, 0], out[:, 1] > 0

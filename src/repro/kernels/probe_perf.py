@@ -7,9 +7,12 @@ TPU adaptation (DESIGN.md §2): one grid step == one row activation.  The
 BlockSpec index_map uses the scalar-prefetched page list (the RLU command
 stream) to "activate" the page row into VMEM; the 8x128 VPU lanes are the
 pitch-matched comparators — the whole row is compared in O(1) vector ops.
-Because TPU lanes are 32-bit, the compare is element-parallel AND
-bit-parallel (in DRAM the sense amps force bit-serial; see probe_bitserial
-for the faithful bit-serial variant).
+The row is the INTERLEAVED (slots, 2) key/value segment of the unified
+PageStore, so ONE BlockSpec fetch per chain step exposes both the keys to
+compare and the value to latch — exactly the paper's single row activation
+serving the whole probe (§2.2, §2.4).  Because TPU lanes are 32-bit, the
+compare is element-parallel AND bit-parallel (in DRAM the sense amps force
+bit-serial; see probe_bitserial for the faithful bit-serial variant).
 
 Grid: (Q, C) — C (chain position) iterates fastest and accumulates
 first-match results into a 128-lane output "cache line" per query, matching
@@ -28,7 +31,7 @@ U32 = jnp.uint32
 LINE = 128  # output cache line width (lanes)
 
 
-def _kernel(pages_ref, queries_ref, keys_ref, vals_ref, out_ref):
+def _kernel(pages_ref, queries_ref, pool_ref, out_ref):
     c = pl.program_id(1)
     q = pl.program_id(0)
 
@@ -40,14 +43,15 @@ def _kernel(pages_ref, queries_ref, keys_ref, vals_ref, out_ref):
     query = queries_ref[q]
     valid = page >= 0
 
-    row = keys_ref[...]                                      # (1, S) uint32
+    kv = pool_ref[...]                                       # (1, S, 2) uint32
+    row = kv[..., 0]                                         # (1, S) keys
     match = (row == query) & valid                           # element-parallel compare
     any_match = jnp.any(match)
 
     slot_iota = jax.lax.broadcasted_iota(jnp.int32, row.shape, 1)
     slot = jnp.min(jnp.where(match, slot_iota, jnp.int32(2**30)))
     onehot = (slot_iota == slot) & match
-    val = jnp.max(jnp.where(onehot, vals_ref[...], U32(0)))
+    val = jnp.max(jnp.where(onehot, kv[..., 1], U32(0)))     # same activated row
 
     already = out_ref[0, 1] > U32(0)
 
@@ -59,19 +63,20 @@ def _kernel(pages_ref, queries_ref, keys_ref, vals_ref, out_ref):
         out_ref[0, 3] = slot.astype(U32)
 
 
-def probe_pages_perf(key_pages, val_pages, queries, pages, *, interpret=None):
-    """(values (Q,) u32, found (Q,) bool).  See module docstring."""
+def probe_pages_perf(pool, queries, pages, *, interpret=None):
+    """(values (Q,) u32, found (Q,) bool).  ``pool`` is the interleaved
+    (P, S, 2) page pool; see module docstring."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     qn, C = pages.shape
-    P, S = key_pages.shape
+    P, S, _ = pool.shape
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,       # pages, queries
         grid=(qn, C),
         in_specs=[
-            pl.BlockSpec((1, S), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0)),
-            pl.BlockSpec((1, S), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0)),
+            # ONE row activation: keys AND values in a single page fetch
+            pl.BlockSpec((1, S, 2), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, LINE), lambda q, c, pages, queries: (q, 0)),
     )
@@ -80,5 +85,5 @@ def probe_pages_perf(key_pages, val_pages, queries, pages, *, interpret=None):
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((qn, LINE), U32),
         interpret=interpret,
-    )(pages.astype(jnp.int32), queries.astype(U32), key_pages, val_pages)
+    )(pages.astype(jnp.int32), queries.astype(U32), pool)
     return out[:, 0], out[:, 1] > 0

@@ -1,8 +1,10 @@
 """Pure-jnp oracles for the HashMem probe kernels.
 
-All backends implement the same contract:
+All backends implement the same contract over the interleaved pool —
+ONE gathered row per chain step exposes the key AND its value (the paper's
+row-activation semantics):
 
-  probe_pages(key_pages (P,S) u32, val_pages (P,S) u32,
+  probe_pages(pool (P,S,2) u32 [lane 0 = key, lane 1 = value],
               queries (Q,) u32, pages (Q,C) i32 [-1 padded])
       -> (values (Q,) u32, found (Q,) bool)
 
@@ -16,24 +18,25 @@ import jax.numpy as jnp
 U32 = jnp.uint32
 
 
-def probe_pages_ref(key_pages, val_pages, queries, pages):
+def probe_pages_ref(pool, queries, pages):
     qn, C = pages.shape
-    S = key_pages.shape[1]
+    S = pool.shape[1]
     safe = jnp.maximum(pages, 0)
-    rows = key_pages[safe]                                   # (Q, C, S)
-    vrows = val_pages[safe]                                  # (Q, C, S)
-    match = (rows == queries[:, None, None].astype(U32)) & (pages >= 0)[:, :, None]
+    rows = pool[safe]                                        # (Q, C, S, 2)
+    match = (rows[..., 0] == queries[:, None, None].astype(U32)) \
+        & (pages >= 0)[:, :, None]
     flat = match.reshape(qn, C * S)
     found = jnp.any(flat, axis=1)
     idx = jnp.argmax(flat, axis=1)                           # first match
-    vals = vrows.reshape(qn, C * S)[jnp.arange(qn), idx]
+    vals = rows[..., 1].reshape(qn, C * S)[jnp.arange(qn), idx]
     return jnp.where(found, vals, U32(0)), found
 
 
-def probe_bitplanes_ref(planes, val_pages, queries, pages, key_bits: int):
+def probe_bitplanes_ref(planes, pool, queries, pages, key_bits: int):
     """Oracle for the bit-serial backend: operates on the bit-plane layout
     directly (plane-XOR-accumulate), mirroring the kernel's algorithm in
-    pure jnp.  Must agree with probe_pages_ref on the same logical content."""
+    pure jnp; values come from the interleaved pool's value lane.  Must
+    agree with probe_pages_ref on the same logical content."""
     qn, C = pages.shape
     P, b, W = planes.shape
     assert b == key_bits
@@ -52,6 +55,6 @@ def probe_bitplanes_ref(planes, val_pages, queries, pages, key_bits: int):
     flat = match.reshape(qn, C * S)
     found = jnp.any(flat, axis=1)
     idx = jnp.argmax(flat, axis=1)
-    vrows = val_pages[safe].reshape(qn, C * S)
+    vrows = pool[safe][..., 1].reshape(qn, C * S)
     vals = vrows[jnp.arange(qn), idx]
     return jnp.where(found, vals, U32(0)), found

@@ -36,9 +36,8 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import ARCHS, SHAPES, ServeConfig, get_config, cells
+from repro.configs import SHAPES, ServeConfig, get_config, cells
 from repro.configs.base import OptimConfig
 from repro.distributed import steps
 from repro.launch.mesh import make_production_mesh

@@ -27,7 +27,8 @@ from repro.models import model
 
 
 def serve(cfg, mesh, *, batch=4, horizon=256, page_tokens=32, requests=8,
-          max_new=16, prompt_len=8, seed=0, backend="ref", verbose=True):
+          max_new=16, prompt_len=8, seed=0, backend="ref", verbose=True,
+          compact_chain_len=None):
     shape = ShapeConfig("serve", horizon, batch, "decode")
     scfg = ServeConfig(model=cfg, shape=shape, kv_page_tokens=page_tokens)
     serve_step, jitted, ctx, pshard = dsteps.build_serve_step(cfg, scfg, mesh)
@@ -45,7 +46,8 @@ def serve(cfg, mesh, *, batch=4, horizon=256, page_tokens=32, requests=8,
     step_fn = jitted(states)
 
     mgr = PageTableManager(ctx.pool_pages, num_channels=Dm,
-                           num_groups=n_groups, backend=backend)
+                           num_groups=n_groups, backend=backend,
+                           compact_chain_len=compact_chain_len)
     rng = np.random.default_rng(seed)
 
     # request queue
@@ -121,6 +123,10 @@ def main():
     ap.add_argument("--backend", default="ref",
                     choices=["ref", "perf", "area", "bitserial"])
     ap.add_argument("--mesh", type=int, nargs="*", default=None)
+    ap.add_argument("--compact-chain-len", type=int, default=None,
+                    help="page-table compaction when any bucket chain "
+                         "exceeds this many pages (skewed frees); default: "
+                         "tombstone-fraction trigger only")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -128,7 +134,8 @@ def main():
                      ("data", "model"))
     serve(cfg, mesh, batch=args.batch, requests=args.requests,
           max_new=args.max_new, horizon=args.horizon,
-          page_tokens=args.page_tokens, backend=args.backend)
+          page_tokens=args.page_tokens, backend=args.backend,
+          compact_chain_len=args.compact_chain_len)
 
 
 if __name__ == "__main__":

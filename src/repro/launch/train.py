@@ -11,10 +11,9 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import Checkpointer
-from repro.configs import SHAPES, get_config, smoke_config
+from repro.configs import get_config, smoke_config
 from repro.configs.base import OptimConfig, ShapeConfig
 from repro.data import SyntheticLMData, make_batch_specs
 from repro.distributed import steps as dsteps

@@ -7,7 +7,6 @@ Sliding-window (h2o-danube) and causal masks are applied per chunk.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

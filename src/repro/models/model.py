@@ -7,7 +7,6 @@ frame embeddings).  The loss is sequence-chunked cross-entropy so the full
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

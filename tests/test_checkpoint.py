@@ -1,5 +1,4 @@
 import json
-import os
 
 import jax
 import jax.numpy as jnp

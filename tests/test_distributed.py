@@ -6,7 +6,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -49,6 +48,45 @@ def test_channel_parallel_probe_matches_single():
         v1, f1 = hashmap.probe(hm, jnp.asarray(q), backend="ref")
         assert (np.asarray(f1) == f).all()
         assert (np.asarray(v1)[f] == v[f]).all()
+        print("OK")
+        """)
+
+
+def test_channel_parallel_probe_after_sharded_growth():
+    """probe_sharded on the mesh AFTER rlu.insert_sharded forced synchronized
+    shard growth (the grown stacked pytree must still shard/route/probe)."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs.base import HashMemConfig
+        from repro.core import rlu
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
+        cfg = HashMemConfig(num_buckets=4, slots_per_page=32,
+                            overflow_pages=4, max_chain=3, backend="perf",
+                            auto_grow=True)
+        rng = np.random.default_rng(17)
+        k0 = rng.choice(2**30, 64, replace=False).astype(np.uint32)
+        hm_stacked = rlu.build_sharded(cfg, jnp.asarray(k0),
+                                       jnp.asarray(k0 * 2), num_shards=4)
+        # way past per-shard capacity -> insert_sharded grows every shard
+        k1 = np.setdiff1d(rng.choice(2**30, 1500, replace=False)
+                          .astype(np.uint32), k0)
+        hm_stacked, ok, cfg2 = rlu.insert_sharded(
+            hm_stacked, jnp.asarray(k1), jnp.asarray(k1 * 2), cfg,
+            num_shards=4)
+        assert bool(jnp.all(ok))
+        assert cfg2.num_buckets > cfg.num_buckets
+        allk = np.concatenate([k0, k1])
+        miss = (allk[:128].astype(np.uint64) + 2**31).astype(np.uint32)
+        q = np.concatenate([allk, miss])
+        q = q[: (q.size // 8) * 8]      # trims only trailing miss keys
+        n_hit = allk.size
+        with mesh:
+            v, f = rlu.probe_sharded(mesh, hm_stacked, jnp.asarray(q), cfg2)
+        v, f = np.asarray(v), np.asarray(f)
+        assert f[:n_hit].all()
+        assert (v[:n_hit] == q[:n_hit] * np.uint32(2)).all()
+        assert not f[n_hit:].any()
         print("OK")
         """)
 

@@ -13,7 +13,6 @@ import pytest
 
 from repro.configs.base import HashMemConfig
 from repro.core import hashmap
-from repro.core.hashing import EMPTY_KEY, TOMBSTONE_KEY
 
 HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
 if HAVE_HYPOTHESIS:

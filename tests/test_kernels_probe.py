@@ -1,12 +1,13 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs the pure-jnp
-oracle (kernels/ref.py) on identical page pools, including missing keys,
-tombstones and chain padding."""
+oracle (kernels/ref.py) on identical interleaved page pools, including
+missing keys, tombstones and chain padding.  All kernels consume the unified
+PageStore (P, S, 2) pool — one fetched row per chain step carries keys and
+values."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import layout
-from repro.core.hashing import EMPTY_KEY, TOMBSTONE_KEY
 from repro.kernels import ref
 from repro.kernels.probe_area import probe_pages_area
 from repro.kernels.probe_bitserial import probe_pages_bitserial
@@ -67,17 +68,17 @@ def make_queries(rng, kp, vp, live, Q, C, P, key_bits=32):
 def test_kernel_vs_oracle(P, S, Q, C, kernel):
     rng = np.random.default_rng(P * 1000 + S + Q + C)
     kp, vp, live = make_pool(rng, P, S)
+    pool = layout.interleave(jnp.asarray(kp), jnp.asarray(vp))
     q, pages = make_queries(rng, kp, vp, live, Q, C, P)
-    kpj, vpj = jnp.asarray(kp), jnp.asarray(vp)
     qj, pj = jnp.asarray(q), jnp.asarray(pages)
-    want_v, want_f = ref.probe_pages_ref(kpj, vpj, qj, pj)
+    want_v, want_f = ref.probe_pages_ref(pool, qj, pj)
     if kernel == "perf":
-        got_v, got_f = probe_pages_perf(kpj, vpj, qj, pj, interpret=True)
+        got_v, got_f = probe_pages_perf(pool, qj, pj, interpret=True)
     elif kernel == "area":
-        got_v, got_f = probe_pages_area(kpj, vpj, qj, pj, interpret=True)
+        got_v, got_f = probe_pages_area(pool, qj, pj, interpret=True)
     else:
-        planes = layout.pack_bitplanes(kpj, 32)
-        got_v, got_f = probe_pages_bitserial(planes, vpj, qj, pj, 32,
+        planes = layout.pack_bitplanes(pool[..., 0], 32)
+        got_v, got_f = probe_pages_bitserial(planes, pool, qj, pj, 32,
                                              interpret=True)
     np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
     np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
@@ -90,11 +91,11 @@ def test_bitserial_key_widths(key_bits):
     P, S, Q, C = 8, 128, 32, 2
     kp, vp, live = make_pool(rng, P, S, key_bits=key_bits, fill=0.4)
     q, pages = make_queries(rng, kp, vp, live, Q, C, P, key_bits=key_bits)
-    kpj, vpj = jnp.asarray(kp), jnp.asarray(vp)
+    pool = layout.interleave(jnp.asarray(kp), jnp.asarray(vp))
     qj, pj = jnp.asarray(q), jnp.asarray(pages)
-    want_v, want_f = ref.probe_pages_ref(kpj, vpj, qj, pj)
-    planes = layout.pack_bitplanes(kpj, key_bits)
-    got_v, got_f = probe_pages_bitserial(planes, vpj, qj, pj, key_bits,
+    want_v, want_f = ref.probe_pages_ref(pool, qj, pj)
+    planes = layout.pack_bitplanes(pool[..., 0], key_bits)
+    got_v, got_f = probe_pages_bitserial(planes, pool, qj, pj, key_bits,
                                          interpret=True)
     np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
     np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
@@ -112,10 +113,11 @@ def test_bitplanes_ref_matches_keys_ref():
     rng = np.random.default_rng(1)
     kp, vp, live = make_pool(rng, 16, 128)
     q, pages = make_queries(rng, kp, vp, live, 64, 3, 16)
-    kpj, vpj, qj, pj = map(jnp.asarray, (kp, vp, q, pages))
-    planes = layout.pack_bitplanes(kpj, 32)
-    v1, f1 = ref.probe_pages_ref(kpj, vpj, qj, pj)
-    v2, f2 = ref.probe_bitplanes_ref(planes, vpj, qj, pj, 32)
+    pool = layout.interleave(jnp.asarray(kp), jnp.asarray(vp))
+    qj, pj = jnp.asarray(q), jnp.asarray(pages)
+    planes = layout.pack_bitplanes(pool[..., 0], 32)
+    v1, f1 = ref.probe_pages_ref(pool, qj, pj)
+    v2, f2 = ref.probe_bitplanes_ref(planes, pool, qj, pj, 32)
     np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
     np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
 
@@ -126,13 +128,14 @@ def test_first_match_chain_order():
     vp = np.zeros((4, 128), np.uint32)
     kp[1, 5] = 42; vp[1, 5] = 111
     kp[3, 77] = 42; vp[3, 77] = 222
+    pool = layout.interleave(jnp.asarray(kp), jnp.asarray(vp))
     q = jnp.asarray([42], jnp.uint32)
     pages = jnp.asarray([[1, 3]], jnp.int32)
     for fn in (ref.probe_pages_ref,
                lambda *a: probe_pages_perf(*a, interpret=True),
                lambda *a: probe_pages_area(*a, interpret=True)):
-        v, f = fn(jnp.asarray(kp), jnp.asarray(vp), q, pages)
+        v, f = fn(pool, q, pages)
         assert bool(f[0]) and int(v[0]) == 111
     pages2 = jnp.asarray([[3, 1]], jnp.int32)
-    v, f = ref.probe_pages_ref(jnp.asarray(kp), jnp.asarray(vp), q, pages2)
+    v, f = ref.probe_pages_ref(pool, q, pages2)
     assert int(v[0]) == 222

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, smoke_config
-from repro.configs.base import OptimConfig, ShapeConfig
+from repro.configs.base import OptimConfig
 from repro.models import model
 from repro.optim import adamw_update, init_opt_state
 

@@ -23,7 +23,6 @@ import pytest
 
 from repro.configs.base import HashMemConfig
 from repro.core import hashmap, layout
-from repro.core.hashing import TOMBSTONE_KEY
 
 from model import DictModel
 
@@ -115,6 +114,17 @@ class DiffHarness:
             assert int(cl.sum()) == int(np.asarray(hm.free_top))
             assert st["free_pages"] == \
                 hm.config.num_pages - int(np.asarray(hm.free_top))
+            # unified PageStore: the split views are lanes of ONE pool, and
+            # slots never written through the fused path keep a zero value
+            # lane (EMPTY key => untouched row half)
+            pool = np.asarray(hm.store.pool)
+            assert pool.shape[-1] == 2 and pool.dtype == np.uint32
+            kp = np.asarray(hm.key_pages)
+            np.testing.assert_array_equal(pool[..., 0], kp)
+            np.testing.assert_array_equal(pool[..., 1],
+                                          np.asarray(hm.val_pages))
+            assert (pool[..., 1][kp == np.uint32(0xFFFFFFFF)] == 0).all(), \
+                "value lane written without its key (fused write violated)"
         decoded = layout.unpack_bitplanes(self.hm_bits.planes,
                                           self.hm_bits.config.key_bits)
         assert bool(jnp.all(decoded == self.hm_bits.key_pages)), \

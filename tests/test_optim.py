@@ -1,7 +1,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import OptimConfig
 from repro.optim import adamw_update, init_opt_state, lr_schedule

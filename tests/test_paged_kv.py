@@ -34,6 +34,53 @@ def test_manager_alloc_free_invariants():
     np.testing.assert_array_equal(table[0], bt3)
 
 
+def test_chain_len_triggered_compaction():
+    """Skewed alloc/free churn piles tombstoned pages onto hot page-table
+    chains long before the global tombstone fraction trips; the
+    ``compact_chain_len`` trigger reclaims them, the fraction-only control
+    manager does not."""
+    from repro.configs.base import HashMemConfig
+    from repro.core import hashmap
+    from repro.data.kv_synth import churn_workload
+
+    def run(compact_chain_len):
+        # few buckets -> hot chains; fraction trigger effectively disabled
+        cfg = HashMemConfig(num_buckets=4, slots_per_page=32,
+                            overflow_pages=64, max_chain=8, backend="ref",
+                            auto_grow=False, compact_tombstone_frac=1.0,
+                            compact_chain_len=compact_chain_len)
+        mgr = PageTableManager(64, num_channels=1, hashmem_cfg=cfg)
+        peak = 0
+        # Zipf-skewed op stream: hot seq ids are allocated and freed over
+        # and over -> tombstone churn concentrated on a few buckets
+        for op, ks, _ in churn_workload(240, keyspace=64, seed=23,
+                                        p_insert=0.5, p_delete=0.4):
+            seqs = sorted({int(k) % 24 for k in ks})
+            if op == "insert":
+                for s in seqs:
+                    if s not in mgr.owned and mgr.live_pages() + 2 <= 64:
+                        mgr.alloc_seq(s, 2)
+            elif op == "delete":
+                for s in seqs:
+                    mgr.free_seq(s)
+            peak = max(peak, hashmap.max_chain_len(mgr.hm))
+        # table still resolves every live sequence after compactions
+        live = sorted(mgr.owned)
+        if live:
+            table = mgr.block_table(live, 2)
+            for i, s in enumerate(live):
+                np.testing.assert_array_equal(table[i], mgr.owned[s])
+        return mgr, peak
+
+    mgr_chain, peak_chain = run(compact_chain_len=2)
+    mgr_ctrl, peak_ctrl = run(compact_chain_len=0)
+    assert mgr_chain.compact_events >= 1
+    assert mgr_ctrl.compact_events == 0          # fraction never trips
+    assert peak_chain < peak_ctrl                # chains actually kept short
+    assert hashmap.max_chain_len(mgr_chain.hm) <= \
+        hashmap.max_chain_len(mgr_ctrl.hm)
+
+
 def test_manager_exhaustion():
     mgr = PageTableManager(8, num_channels=2, backend="ref")
     mgr.alloc_seq(1, 8)

@@ -1,0 +1,136 @@
+"""Unified PageStore round-trips: the fused key/value write path vs
+independent per-lane scatters, the thin split views, and bit-plane
+consistency after store-routed writes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HashMemConfig
+from repro.core import hashmap, layout
+from repro.core.hashing import EMPTY_KEY, TOMBSTONE_KEY
+
+
+def _fresh(P=8, S=64, key_bits=32, with_planes=True):
+    return layout.empty_store(P, S, key_bits, with_planes=with_planes)
+
+
+def _writes(rng, P, S, B, oob=0):
+    """B unique (page, slot) targets (+``oob`` out-of-range pages at the end)."""
+    flat = rng.choice(P * S, size=B, replace=False)
+    pages = (flat // S).astype(np.int32)
+    slots = (flat % S).astype(np.int32)
+    if oob:
+        pages = np.concatenate([pages, np.full(oob, P, np.int32)])
+        slots = np.concatenate([slots, np.zeros(oob, np.int32)])
+    keys = rng.integers(0, 2**31, pages.size).astype(np.uint32)
+    vals = rng.integers(0, 2**31, pages.size).astype(np.uint32)
+    return map(jnp.asarray, (pages, slots, keys, vals))
+
+
+@pytest.mark.parametrize("with_planes", [False, True])
+def test_write_slots_matches_independent_scatters(with_planes):
+    """ONE fused pool scatter == the split layout's two independent key/val
+    scatters, exactly (including mode="drop" on out-of-range pages)."""
+    rng = np.random.default_rng(0)
+    store = _fresh(with_planes=with_planes)
+    pages, slots, keys, vals = _writes(rng, 8, 64, 48, oob=4)
+    out = store.write_slots(pages, slots, keys, vals)
+    # independent split-pool reference
+    want_k = store.key_pages.at[pages, slots].set(keys, mode="drop")
+    want_v = store.val_pages.at[pages, slots].set(vals, mode="drop")
+    np.testing.assert_array_equal(np.asarray(out.key_pages),
+                                  np.asarray(want_k))
+    np.testing.assert_array_equal(np.asarray(out.val_pages),
+                                  np.asarray(want_v))
+    if with_planes:
+        decoded = layout.unpack_bitplanes(out.planes, out.key_bits)
+        np.testing.assert_array_equal(np.asarray(decoded),
+                                      np.asarray(out.key_pages))
+    else:
+        assert out.planes is None
+
+
+def test_interleaved_views():
+    """key_pages/val_pages are lane views of the one pool; shapes and dtypes
+    match the split layout contract."""
+    rng = np.random.default_rng(1)
+    store = _fresh(P=4, S=32, with_planes=False)
+    assert store.pool.shape == (4, 32, 2) and store.pool.dtype == jnp.uint32
+    assert store.num_pages == 4 and store.slots == 32
+    assert bool(jnp.all(store.key_pages == EMPTY_KEY))
+    assert bool(jnp.all(store.val_pages == 0))
+    pages, slots, keys, vals = _writes(rng, 4, 32, 16)
+    out = store.write_slots(pages, slots, keys, vals)
+    np.testing.assert_array_equal(np.asarray(out.pool[..., layout.KEY_LANE]),
+                                  np.asarray(out.key_pages))
+    np.testing.assert_array_equal(np.asarray(out.pool[..., layout.VAL_LANE]),
+                                  np.asarray(out.val_pages))
+    # round-trip through interleave()
+    re = layout.interleave(out.key_pages, out.val_pages)
+    np.testing.assert_array_equal(np.asarray(re), np.asarray(out.pool))
+
+
+def test_write_keys_tombstone_leaves_values():
+    """Tombstone writes rewrite the key lane only — the value is the paper's
+    'wasted space' until compact()."""
+    rng = np.random.default_rng(2)
+    store = _fresh(with_planes=True)
+    pages, slots, keys, vals = _writes(rng, 8, 64, 32)
+    store = store.write_slots(pages, slots, keys, vals)
+    t = jnp.full((8,), TOMBSTONE_KEY, jnp.uint32)
+    out = store.write_keys(pages[:8], slots[:8], t)
+    kp = np.asarray(out.key_pages)
+    assert (kp[np.asarray(pages[:8]), np.asarray(slots[:8])]
+            == np.uint32(0xFFFFFFFE)).all()
+    np.testing.assert_array_equal(np.asarray(out.val_pages),
+                                  np.asarray(store.val_pages))
+    decoded = layout.unpack_bitplanes(out.planes, out.key_bits)
+    np.testing.assert_array_equal(np.asarray(decoded), kp)
+
+
+def test_store_routed_mutations_keep_planes_consistent():
+    """Bit-planes stay exactly in sync with the key lane through a
+    store-routed insert/delete/insert sequence on a live HashMem."""
+    cfg = HashMemConfig(num_buckets=8, slots_per_page=32, overflow_pages=16,
+                        max_chain=4, backend="bitserial", auto_grow=False)
+    rng = np.random.default_rng(3)
+    hm = hashmap.create(cfg)
+    for step in range(4):
+        ks = rng.choice(500, 16).astype(np.uint32)
+        hm, _ = hashmap.insert(hm, jnp.asarray(ks), jnp.asarray(ks * 7))
+        hm, _ = hashmap.delete(hm, jnp.asarray(ks[:4]))
+        decoded = layout.unpack_bitplanes(hm.planes, cfg.key_bits)
+        assert bool(jnp.all(decoded == hm.key_pages)), step
+
+
+def test_hashmem_views_alias_store():
+    """HashMem's split-view properties are exactly the store's lanes and
+    bookkeeping (the migration shim for external callers)."""
+    cfg = HashMemConfig(num_buckets=4, slots_per_page=32, overflow_pages=8,
+                        max_chain=3, backend="perf", auto_grow=False)
+    hm = hashmap.create(cfg)
+    ks = jnp.arange(1, 40, dtype=jnp.uint32)
+    hm, _ = hashmap.insert(hm, ks, ks * 2)
+    np.testing.assert_array_equal(np.asarray(hm.key_pages),
+                                  np.asarray(hm.store.pool[..., 0]))
+    np.testing.assert_array_equal(np.asarray(hm.val_pages),
+                                  np.asarray(hm.store.pool[..., 1]))
+    assert hm.page_next is hm.store.page_next
+    assert hm.page_fill is hm.store.page_fill
+    assert hm.free_top is hm.store.free_top
+    # never-written slots keep a zero value lane (the fused write is the only
+    # path that touches the value lane)
+    kp, vp = np.asarray(hm.key_pages), np.asarray(hm.val_pages)
+    assert (vp[kp == np.uint32(0xFFFFFFFF)] == 0).all()
+
+
+def test_store_is_a_pytree():
+    """PageStore leaves stack/map like any pytree (the RLU shard layout)."""
+    import jax
+    s1 = _fresh(P=4, S=32, with_planes=True)
+    s2 = _fresh(P=4, S=32, with_planes=True)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), s1, s2)
+    assert stacked.pool.shape == (2, 4, 32, 2)
+    back = jax.tree.map(lambda x: x[1], stacked)
+    np.testing.assert_array_equal(np.asarray(back.pool), np.asarray(s2.pool))
+    assert back.key_bits == 32

@@ -1,5 +1,4 @@
 """Serving integration: continuous batching with the HashMem page table."""
-import numpy as np
 import pytest
 
 from repro.configs import smoke_config

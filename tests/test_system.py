@@ -1,7 +1,6 @@
 """End-to-end system behaviour: the paper's full pipeline in miniature —
 build a HashMem, probe it through every backend, serve a model whose KV
 page table is that HashMem, and train the same model family."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

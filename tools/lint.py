@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Repo lint entry point (``make lint``).
+
+Prefers ``ruff check`` (config in pyproject.toml).  The container image does
+not ship ruff and installing packages is off-limits, so when ruff is absent
+this degrades to a dependency-free fallback that still catches the
+high-signal subset: syntax errors and unused module-level imports.
+"""
+from __future__ import annotations
+
+import ast
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+TARGETS = ["src", "tests", "benchmarks", "examples", "tools"]
+
+
+def try_ruff() -> int | None:
+    """Run ruff if present; None when unavailable."""
+    if shutil.which("ruff"):
+        cmd = ["ruff"]
+    else:
+        probe = subprocess.run([sys.executable, "-m", "ruff", "--version"],
+                               capture_output=True)
+        if probe.returncode != 0:
+            return None
+        cmd = [sys.executable, "-m", "ruff"]
+    return subprocess.run(cmd + ["check"] + TARGETS, cwd=ROOT).returncode
+
+
+class _ImportUseVisitor(ast.NodeVisitor):
+    """Collect module-level imported names and every name usage."""
+
+    def __init__(self):
+        self.imported: dict[str, int] = {}   # name -> lineno
+        self.used: set[str] = set()
+
+    def visit_Import(self, node):
+        for a in node.names:
+            name = (a.asname or a.name).split(".")[0]
+            self.imported.setdefault(name, node.lineno)
+
+    def visit_ImportFrom(self, node):
+        if node.module == "__future__":
+            return
+        for a in node.names:
+            if a.name == "*":
+                continue
+            self.imported.setdefault(a.asname or a.name, node.lineno)
+
+    def visit_Name(self, node):
+        self.used.add(node.id)
+
+
+def fallback_lint() -> int:
+    failures = 0
+    for target in TARGETS:
+        for path in sorted((ROOT / target).rglob("*.py")):
+            rel = path.relative_to(ROOT)
+            src = path.read_text()
+            try:
+                tree = ast.parse(src, filename=str(rel))
+            except SyntaxError as e:
+                print(f"{rel}:{e.lineno}: E999 syntax error: {e.msg}")
+                failures += 1
+                continue
+            if path.name == "__init__.py":
+                continue                     # re-export modules
+            v = _ImportUseVisitor()
+            v.visit(tree)
+            exported = set()
+            for node in tree.body:           # names re-exported via __all__
+                if (isinstance(node, ast.Assign)
+                        and any(isinstance(t, ast.Name) and t.id == "__all__"
+                                for t in node.targets)
+                        and isinstance(node.value, (ast.List, ast.Tuple))):
+                    exported = {c.value for c in node.value.elts
+                                if isinstance(c, ast.Constant)}
+            for name, lineno in sorted(v.imported.items(),
+                                       key=lambda kv: kv[1]):
+                if name not in v.used and name not in exported:
+                    print(f"{rel}:{lineno}: F401 '{name}' imported but unused")
+                    failures += 1
+    if failures:
+        print(f"fallback lint: {failures} finding(s)")
+    else:
+        print("fallback lint: clean")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    rc = try_ruff()
+    if rc is not None:
+        return rc
+    print("ruff not installed; running dependency-free fallback "
+          "(syntax + unused module-level imports)")
+    return fallback_lint()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
