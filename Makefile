@@ -1,7 +1,8 @@
 # Tier-1 verify (ROADMAP.md) — run verbatim.
 PYTHON ?= python
 
-.PHONY: test test-slow bench-kernels bench-json lint
+.PHONY: test test-slow bench-kernels bench-json bench-serving bench-smoke \
+	lint ci
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) -m pytest -x -q
@@ -18,7 +19,19 @@ bench-kernels:
 bench-json:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) benchmarks/kernel_bench.py --json
 
+# serving-engine throughput trajectory: coalesced ticks vs per-request
+# baseline at 64 concurrent requests; APPENDS a run to BENCH_serving.json
+bench-serving:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) benchmarks/serving_bench.py --json
+
+# fast serving-bench smoke (no JSON write) for ci
+bench-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) benchmarks/serving_bench.py --smoke
+
 # ruff check (config in pyproject.toml); dependency-free fallback when the
 # container has no ruff (no pip installs allowed)
 lint:
 	$(PYTHON) tools/lint.py
+
+# the full gate: lint + tier-1 tests + a fast bench smoke
+ci: lint test bench-smoke

@@ -1,0 +1,24 @@
+"""Shared helpers for the BENCH_*.json perf trajectories."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def append_run(path: str, payload: dict) -> int:
+    """Append this run to the trajectory file ({"bench", "runs": [...]}),
+    migrating the legacy single-run {"bench", "rows"} layout in place.
+    Returns the run count after appending."""
+    doc = {"bench": payload.get("bench", ""), "runs": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+        if "runs" in old:
+            doc = old
+        elif "rows" in old:                      # legacy single-run layout
+            doc["bench"] = old.get("bench", doc["bench"])
+            doc["runs"] = [{"rows": old["rows"]}]
+    doc["runs"].append({k: v for k, v in payload.items() if k != "bench"})
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return len(doc["runs"])

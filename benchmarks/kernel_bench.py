@@ -6,21 +6,22 @@ On-TPU wall-clock is not available in this container; the structural numbers
 kernel definitions and are the quantities a Mosaic schedule would be built
 around (see EXPERIMENTS.md §Perf).
 
-``--json`` writes every row to ``BENCH_kernels.json`` (see ``make
+``--json`` APPENDS this run to ``BENCH_kernels.json`` (see ``make
 bench-json``) so per-backend probe and insert/grow timings are tracked as a
-trajectory across PRs.
+per-PR trajectory (a ``runs`` list; one entry per ``make bench-json``).
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from bench_util import append_run
 from repro.configs.base import HashMemConfig
 from repro.core import hashmap
+from repro.core.introspect import count_scatters
 
 VMEM_BYTES = 128 * 1024 * 1024  # v5e VMEM per core
 
@@ -41,34 +42,6 @@ def vmem_footprint(slots: int, key_bits: int = 32):
         "area": row_kv + line,
         "bitserial": planes + val_lane + line,
     }
-
-
-def count_scatters(fn, *args):
-    """Number of scatter primitives in fn's jaxpr (recursing into sub-jaxprs
-    — the structural 'pool scatters per op' the ROADMAP tracks)."""
-    import jax
-
-    n = 0
-
-    def visit(v):
-        if hasattr(v, "jaxpr"):        # ClosedJaxpr
-            walk(v.jaxpr)
-        elif hasattr(v, "eqns"):       # Jaxpr
-            walk(v)
-        elif isinstance(v, (tuple, list)):   # e.g. cond/switch branches
-            for x in v:
-                visit(x)
-
-    def walk(j):
-        nonlocal n
-        for eq in j.eqns:
-            if eq.primitive.name.startswith("scatter"):
-                n += 1
-            for v in eq.params.values():
-                visit(v)
-
-    walk(jax.make_jaxpr(fn)(*args).jaxpr)
-    return n
 
 
 def _bench(fn, warmup: int = 2, iters: int = 5) -> float:
@@ -212,11 +185,8 @@ def main():
     for r in rows:
         print(r)
     if args.json:
-        payload = {"bench": "kernels",
-                   "rows": rows}
-        with open(args.out, "w") as f:
-            json.dump(payload, f, indent=2)
-        print(f"wrote {len(rows)} rows -> {args.out}")
+        n = append_run(args.out, {"bench": "kernels", "rows": rows})
+        print(f"appended run #{n} ({len(rows)} rows) -> {args.out}")
 
 
 if __name__ == "__main__":

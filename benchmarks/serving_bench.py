@@ -1,0 +1,129 @@
+"""Serving-engine benchmark: coalesced ticks vs per-request HashMem calls.
+
+Drives the multi-tenant continuous-batching engine (repro.serving) with the
+YCSB-style loadgen twice over the SAME request stream:
+
+  * ``coalesced``   — the engine's step-level coalescing: at most one
+    vectorized probe/delete/insert call per shard per tick;
+  * ``per_request`` — identical schedule, but one HashMem call per op
+    (``coalesce=False``), i.e. the synchronous one-op-per-host-call serving
+    loop this PR replaces.
+
+The acceptance bar (ISSUE 4): at 64 concurrent requests the coalesced
+engine sustains >= 5x the ops/sec of the per-request baseline — batching
+turns O(requests) host<->device round trips per tick into O(1).
+
+``--json`` APPENDS this run to ``BENCH_serving.json`` (a ``runs`` list), so
+the file keeps a per-PR perf trajectory like BENCH_kernels.json.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from bench_util import append_run
+
+from repro.serving import build_ycsb_engine
+
+
+def run_mode(*, coalesce, workloads, slots, shards, record_count,
+             ops_per_request, requests, seed) -> dict:
+    eng, gens = build_ycsb_engine(workloads, slots=slots, shards=shards,
+                                  record_count=record_count,
+                                  ops_per_request=ops_per_request,
+                                  coalesce=coalesce, seed=seed)
+    per = requests // len(gens)
+    reqs = [r for g in gens for r in g.requests(per)]
+    # warmup: an identical engine (same config, slots => same padded batch
+    # shapes) compiles every op-kind trace outside the timed window — the
+    # module-level jit cache is shared, so the measured run is steady-state
+    warm, wgens = build_ycsb_engine(workloads, slots=slots, shards=shards,
+                                    record_count=record_count,
+                                    ops_per_request=ops_per_request,
+                                    coalesce=coalesce, seed=seed + 997)
+    warm.submit_all([r for g in wgens for r in g.requests(2 * slots
+                                                          // len(wgens))])
+    warm.run()
+
+    t0 = time.perf_counter()
+    eng.submit_all(reqs)
+    snap = eng.run()
+    wall = time.perf_counter() - t0
+    name = "coalesced" if coalesce else "per_request"
+    return {
+        "name": f"serving_{''.join(workloads)}_{slots}slots_{name}",
+        "mode": name,
+        "concurrency": slots,
+        "shards": shards,
+        "requests": len(reqs),
+        "total_ops": snap["total_ops"],
+        "ticks": snap["ticks"],
+        "wall_seconds": wall,
+        "ops_per_sec": snap["total_ops"] / wall if wall > 0 else 0.0,
+        "hashmem_calls": dict(eng.batch_calls),
+        "calls_per_tick": sum(eng.batch_calls.values()) / max(snap["ticks"], 1),
+        "request_latency_ticks_p50": snap["request_latency_ticks"]["p50"],
+        "request_latency_ticks_p99": snap["request_latency_ticks"]["p99"],
+        "request_latency_ms_p50": snap["request_latency_ms"]["p50"],
+        "request_latency_ms_p99": snap["request_latency_ms"]["p99"],
+        "occupancy_mean": snap["occupancy"]["mean"],
+        "probe_hit_rate": snap["probe_hit_rate"],
+        "grow_events": eng.grow_events,
+        "compact_events": eng.compact_events,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="append this run to BENCH_serving.json")
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (implies --json)")
+    ap.add_argument("--requests", type=int, default=128)
+    ap.add_argument("--slots", type=int, default=64,
+                    help="concurrent request slots (acceptance bar: 64)")
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--record-count", type=int, default=2048)
+    ap.add_argument("--ops-per-request", type=int, default=4)
+    ap.add_argument("--workloads", default="A,B,E")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI (make ci)")
+    args = ap.parse_args()
+    if args.out is not None:
+        args.json = True
+    args.out = args.out or "BENCH_serving.json"
+    if args.smoke:
+        args.requests, args.slots, args.record_count = 16, 8, 256
+
+    wls = [w.strip().upper() for w in args.workloads.split(",") if w.strip()]
+    kw = dict(workloads=wls, slots=args.slots, shards=args.shards,
+              record_count=args.record_count,
+              ops_per_request=args.ops_per_request, requests=args.requests,
+              seed=args.seed)
+    co = run_mode(coalesce=True, **kw)
+    pr = run_mode(coalesce=False, **kw)
+    speedup = co["ops_per_sec"] / pr["ops_per_sec"] if pr["ops_per_sec"] \
+        else float("inf")
+    rows = [co, pr,
+            {"name": f"serving_speedup_{args.slots}slots",
+             "coalesced_ops_per_sec": co["ops_per_sec"],
+             "per_request_ops_per_sec": pr["ops_per_sec"],
+             "speedup": speedup,
+             "meets_5x_bar": speedup >= 5.0}]
+    for r in rows:
+        print(r)
+    if args.json:
+        n = append_run(args.out, {
+            "bench": "serving",
+            "concurrency": args.slots,
+            "requests": args.requests,
+            "workloads": wls,
+            "speedup_coalesced_vs_per_request": speedup,
+            "rows": rows,
+        })
+        print(f"appended run #{n} -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

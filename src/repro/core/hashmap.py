@@ -282,6 +282,25 @@ def max_chain_len(hm: HashMem) -> int:
     return int(jnp.max(chain_lengths(hm)))
 
 
+def compact_due(hm: HashMem, tombstones: int, *, fraction: bool = True,
+                chain: bool = True) -> bool:
+    """THE compaction trigger policy (single definition for every serving
+    layer — PageTableManager and ServingEngine): with tombstones present,
+    compact when they exceed ``compact_tombstone_frac`` of capacity
+    (``fraction``) or, with ``compact_chain_len`` > 0, when any bucket
+    chain exceeds that many pages (``chain`` — a device walk + host sync;
+    callers that need to throttle it pass chain=False on cheap checks)."""
+    cfg = hm.config
+    if tombstones <= 0:
+        return False
+    if fraction and \
+            tombstones > cfg.compact_tombstone_frac * cfg.num_pages * \
+            cfg.slots_per_page:
+        return True
+    return chain and cfg.compact_chain_len > 0 and \
+        max_chain_len(hm) > cfg.compact_chain_len
+
+
 # ---------------------------------------------------------------------------
 # Probe / insert / delete
 # ---------------------------------------------------------------------------
@@ -319,20 +338,26 @@ def _chain_tails(hm: HashMem, b: jax.Array):
     return tail, hm.page_fill[tail], clen
 
 
-def insert(hm: HashMem, keys: jax.Array, vals: jax.Array):
+def insert(hm: HashMem, keys: jax.Array, vals: jax.Array,
+           valid: Optional[jax.Array] = None):
     """Vectorized batched insert: appends the whole batch at the existing
     chain tails in one shot (sort/rank/segment, same machinery as
     ``build_with_buckets``).  Equivalent to repeated single inserts in batch
     order.  Returns (new_hm, ok (B,) bool); see the module docstring for the
     ok=False (PR_ERROR) semantics.
+
+    ``valid`` (optional (B,) bool) marks padding: invalid elements write
+    nothing, claim no arena pages and report ok=False — the serving engine
+    pads insert batches to power-of-two shapes to bound the set of compiled
+    shapes (engine.py).
     """
     cfg = hm.config
     b = hash_to_bucket(keys.astype(U32), cfg.num_buckets, cfg.hash_fn, cfg.salt)
-    return insert_with_buckets(hm, keys, vals, b)
+    return insert_with_buckets(hm, keys, vals, b, valid)
 
 
 def insert_with_buckets(hm: HashMem, keys: jax.Array, vals: jax.Array,
-                        b: jax.Array):
+                        b: jax.Array, valid: Optional[jax.Array] = None):
     """``insert`` with caller-supplied bucket ids (RLU channel layer).
 
     Three pool-shaped scatters total: the fused key/value row write
@@ -345,14 +370,18 @@ def insert_with_buckets(hm: HashMem, keys: jax.Array, vals: jax.Array,
     keys = keys.astype(U32)
     vals = vals.astype(U32)
     b = b.astype(I32)
+    if valid is not None:
+        b = jnp.where(valid, b, cfg.num_buckets)   # pads sort to the end
 
-    tail, fill, clen = _chain_tails(hm, b)
+    # clamped gather: dropped entries read bucket 0's tail, never used
+    tail, fill, clen = _chain_tails(hm, jnp.minimum(b, cfg.num_buckets - 1))
 
     # stable sort by bucket keeps intra-bucket batch order (duplicate keys
     # land in insertion order, matching sequential semantics)
     order = jnp.argsort(b)
     bs, ks, vs = b[order], keys[order], vals[order]
     tails, fills, clens = tail[order], fill[order], clen[order]
+    dropped = bs >= cfg.num_buckets
 
     start = jnp.searchsorted(bs, bs, side="left")
     rank = jnp.arange(n, dtype=I32) - start.astype(I32)
@@ -364,13 +393,13 @@ def insert_with_buckets(hm: HashMem, keys: jax.Array, vals: jax.Array,
     # page, in sorted (bucket) order — one cumsum, no per-bucket arrays.
     # Pages of one bucket stay contiguous (no other bucket's start can fall
     # between two starts of the same bucket segment).
-    ok_chain = clens + depth <= cfg.max_chain   # RLU command-depth bound
+    ok_chain = (clens + depth <= cfg.max_chain) & ~dropped  # RLU depth bound
     is_new_page = ok_chain & (depth >= 1) & (slot == 0)
     page_idx = jnp.cumsum(is_new_page.astype(I32)) - 1     # shared along page
     new_id = hm.free_top + page_idx
     n_fit = jnp.clip(cfg.num_pages - hm.free_top, 0,
                      jnp.sum(is_new_page.astype(I32)))
-    ok = jnp.where(depth == 0, True, ok_chain & (new_id < cfg.num_pages))
+    ok = jnp.where(depth == 0, ~dropped, ok_chain & (new_id < cfg.num_pages))
     page = jnp.where(depth == 0, tails, new_id).astype(I32)
     wp = jnp.where(ok, page, cfg.num_pages)                # OOB drop if !ok
 

@@ -1,0 +1,39 @@
+"""Structural jaxpr introspection shared by benchmarks and tests.
+
+The quantities here are *compile-time* facts about a traced computation —
+how many pool scatters an op lowers to — used to pin down the unified
+PageStore's write amplification (ROADMAP: fused k+v row write => 3 scatters
+per batch insert) and to assert the serving engine's step-level coalescing
+(one batched insert per tick means a tick's insert path carries exactly the
+scatter count of ONE `hashmap.insert`, independent of how many requests
+contributed ops to the tick).
+"""
+from __future__ import annotations
+
+
+def count_scatters(fn, *args) -> int:
+    """Number of scatter primitives in fn's jaxpr (recursing into sub-jaxprs
+    — the structural 'pool scatters per op' the ROADMAP tracks)."""
+    import jax
+
+    n = 0
+
+    def visit(v):
+        if hasattr(v, "jaxpr"):        # ClosedJaxpr
+            walk(v.jaxpr)
+        elif hasattr(v, "eqns"):       # Jaxpr
+            walk(v)
+        elif isinstance(v, (tuple, list)):   # e.g. cond/switch branches
+            for x in v:
+                visit(x)
+
+    def walk(j):
+        nonlocal n
+        for eq in j.eqns:
+            if eq.primitive.name.startswith("scatter"):
+                n += 1
+            for v in eq.params.values():
+                visit(v)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return n

@@ -246,16 +246,36 @@ class PageTableManager:
             self.free[p // self.pps].append(p)
 
     def alloc_seq(self, seq_id: int, n_blocks: int, group: int = 0) -> np.ndarray:
+        return self.alloc_seqs([(seq_id, n_blocks, group)])[seq_id]
+
+    def alloc_seqs(self, reqs) -> dict:
+        """Coalesced allocation: ``reqs`` is [(seq_id, n_blocks, group), ...]
+        — pages for ALL sequences are claimed from the arenas and their table
+        entries land in ONE batched HashMem insert (the serving engine calls
+        this once per tick, so page-table round trips stay O(1) in the number
+        of admitted requests).  Returns {seq_id: (n_blocks,) int32 phys}."""
         from repro.core import hashmap
-        phys, keys = [], []
-        for j in range(n_blocks):
-            arena = self.free[group * self.Dm + j % self.Dm]
-            if not arena:
-                self._return_pages(phys)            # no partial-alloc leak
-                raise MemoryError("pim_malloc: PR_ERROR (arena exhausted)")
-            p = arena.pop()
-            phys.append(p)
-            keys.append(self._key(seq_id, j))
+        phys, keys, spans = [], [], []
+        for seq_id, n_blocks, group in reqs:
+            start = len(phys)
+            for j in range(n_blocks):
+                arena = self.free[group * self.Dm + j % self.Dm]
+                if not arena:
+                    self._return_pages(phys)        # no partial-alloc leak
+                    raise MemoryError("pim_malloc: PR_ERROR (arena exhausted)")
+                p = arena.pop()
+                phys.append(p)
+                keys.append(self._key(seq_id, j))
+            spans.append((seq_id, start, len(phys)))
+        if not phys:
+            # nothing to insert, but zero-block sequences still get their
+            # (empty) entries — alloc_seq(s, 0) keeps returning an empty
+            # table rather than raising
+            out = {}
+            for seq_id, _, _ in spans:
+                self.owned.setdefault(seq_id, [])
+                out[seq_id] = np.empty((0,), np.int32)
+            return out
         if self.cfg.auto_grow:
             # arena exhaustion / chain overflow in the page table triggers a
             # resize instead of a dropped allocation (hashmap.py docstring)
@@ -274,8 +294,11 @@ class PageTableManager:
         if not bool(jnp.all(ok)):
             self._return_pages(phys)
             raise MemoryError("page-table insert failed (PR_ERROR)")
-        self.owned.setdefault(seq_id, []).extend(phys)
-        return np.asarray(phys, np.int32)
+        out = {}
+        for seq_id, a, b in spans:
+            self.owned.setdefault(seq_id, []).extend(phys[a:b])
+            out[seq_id] = np.asarray(phys[a:b], np.int32)
+        return out
 
     def block_table(self, seq_ids, n_blocks: int) -> np.ndarray:
         """Resolve (B, n_blocks) dense table by probing the HashMem."""
@@ -291,11 +314,20 @@ class PageTableManager:
 
     def free_seq(self, seq_id: int):
         """Tombstone the table entries (paper §2.5) and recycle pages."""
+        self.free_seqs([seq_id])
+
+    def free_seqs(self, seq_ids):
+        """Coalesced free: every finished sequence's table entries are
+        tombstoned in ONE batched HashMem delete (one call per engine tick,
+        however many requests completed in it)."""
         from repro.core import hashmap
-        pages = self.owned.pop(seq_id, [])
+        keys, pages = [], []
+        for seq_id in seq_ids:
+            own = self.owned.pop(seq_id, [])
+            keys.extend(self._key(seq_id, j) for j in range(len(own)))
+            pages.extend(own)
         if not pages:
             return
-        keys = [self._key(seq_id, j) for j in range(len(pages))]
         self.hm, _ = hashmap.delete(self.hm, jnp.asarray(keys, jnp.uint32))
         # every owned key was inserted, so every delete tombstones one slot;
         # counting host-side avoids a device reduction+sync per free
@@ -314,24 +346,37 @@ class PageTableManager:
             tombstoned pages onto a few hot chains — per-probe RLU command
             depth degrades long before the global fraction trips.  The chain
             walk is a device computation + host sync, so it is throttled to
-            every ``CHAIN_CHECK_EVERY`` frees (tombstone counting stays pure
-            host-side, see __init__).
+            every ``CHAIN_CHECK_EVERY`` checks (tombstone counting stays
+            pure host-side, see __init__).
+
+        Called from every free AND from the serving engine's tick clock
+        (:meth:`tick`) — a long-running skewed tenant that stops freeing
+        still gets its accumulated tombstones reclaimed.
         """
         from repro.core import hashmap
         cfg = self.hm.config
-        cap = cfg.num_pages * cfg.slots_per_page
-        trigger = self._tombstones > cfg.compact_tombstone_frac * cap
+        trigger = hashmap.compact_due(self.hm, self._tombstones, chain=False)
         if (not trigger and cfg.compact_chain_len > 0
                 and self._tombstones > 0):
             self._frees_since_chain_check += 1
             if self._frees_since_chain_check >= self.CHAIN_CHECK_EVERY:
                 self._frees_since_chain_check = 0
-                trigger = hashmap.max_chain_len(self.hm) > cfg.compact_chain_len
+                trigger = hashmap.compact_due(self.hm, self._tombstones,
+                                              fraction=False)
         if trigger:
             self.hm = hashmap.compact(self.hm)
             self.compact_events += 1
             self._tombstones = 0
             self._frees_since_chain_check = 0
+
+    def tick(self):
+        """Engine-tick maintenance hook: re-run the compaction triggers on
+        the tick clock rather than only on frees.  Before this hook existed,
+        ``maybe_compact`` ran only inside :meth:`free_seq` — a tenant whose
+        frees stopped (but whose earlier deletes left tombstones on hot
+        chains) never compacted.  The decode loop in launch/serve.py calls
+        this once per step."""
+        self.maybe_compact()
 
     def live_pages(self) -> int:
         return sum(len(v) for v in self.owned.values())

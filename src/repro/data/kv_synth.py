@@ -68,6 +68,86 @@ def churn_workload(n_ops: int, keyspace: int = 4096, insert_batch: int = 8,
             yield "probe", rng.choice(pool, size=probe_batch, p=w), None
 
 
+def zipfian_weights(n: int, theta: float = 0.99) -> np.ndarray:
+    """YCSB Zipfian popularity weights over ranks 1..n (hot head, long tail).
+
+    ``theta`` is the YCSB skew constant (0.99 is the YCSB default; 0 is
+    uniform).  Returned weights are normalized to sum to 1.
+    """
+    w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** theta
+    return w / w.sum()
+
+
+# YCSB core workload op mixes (Cooper et al., SoCC'10).  "rmw" is
+# read-modify-write; "scan" reads a short run of consecutive keys.  The
+# standard key distribution per workload is noted for the loadgen defaults.
+_YCSB_MIXES = {
+    "A": {"read": 0.5, "update": 0.5},
+    "B": {"read": 0.95, "update": 0.05},
+    "C": {"read": 1.0},
+    "D": {"read": 0.95, "insert": 0.05},
+    "E": {"scan": 0.95, "insert": 0.05},
+    "F": {"read": 0.5, "rmw": 0.5},
+}
+_YCSB_DISTS = {"A": "zipfian", "B": "zipfian", "C": "zipfian",
+               "D": "latest", "E": "zipfian", "F": "zipfian"}
+
+
+def ycsb_mix(workload: str) -> dict:
+    """Op mix for YCSB core workload A-F as {op_kind: probability}."""
+    wl = workload.upper()
+    if wl not in _YCSB_MIXES:
+        raise KeyError(f"unknown YCSB workload {workload!r}; "
+                       f"available: {sorted(_YCSB_MIXES)}")
+    return dict(_YCSB_MIXES[wl])
+
+
+def ycsb_default_dist(workload: str) -> str:
+    """The standard key distribution for a YCSB core workload."""
+    return _YCSB_DISTS[workload.upper()]
+
+
+def zipfian_workload(n_ops: int, keyspace: int = 4096, theta: float = 0.99,
+                     insert_batch: int = 8, delete_batch: int = 4,
+                     probe_batch: int = 16, mix=None, workload: str = None,
+                     seed: int = 0):
+    """Zipfian-skewed mixed op stream in the same ``(op, keys, vals)`` shape
+    as :func:`churn_workload` — consumable by both the serving loadgen's
+    preload path and the differential harness's skew schedules.
+
+    ``mix`` maps {"insert", "delete", "probe"} to probabilities (defaults to
+    churn_workload's 0.5/0.25/0.25).  Alternatively pass ``workload`` (YCSB
+    A-F): reads/scans map to "probe", updates/inserts/rmw to "insert", and a
+    small delete fraction is mixed in so tombstone paths stay exercised.
+    """
+    rng = np.random.default_rng(seed)
+    if workload is not None:
+        ym = ycsb_mix(workload)
+        p_probe = ym.get("read", 0.0) + ym.get("scan", 0.0)
+        p_insert = ym.get("update", 0.0) + ym.get("insert", 0.0) \
+            + ym.get("rmw", 0.0)
+        # fold a 5% delete share in proportionally so tombstones appear
+        mix = {"probe": 0.95 * p_probe, "insert": 0.95 * p_insert,
+               "delete": 0.05}
+    mix = mix or {"insert": 0.5, "delete": 0.25, "probe": 0.25}
+    total = sum(mix.values())
+    p_ins, p_del = mix.get("insert", 0) / total, mix.get("delete", 0) / total
+    pool = rng.choice(np.uint32(0xFFFFFFF0), size=keyspace,
+                      replace=False).astype(np.uint32)
+    w = zipfian_weights(keyspace, theta)
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < p_ins:
+            k = rng.choice(pool, size=insert_batch, p=w)
+            v = rng.integers(1, 2**31, size=insert_batch,
+                             dtype=np.int64).astype(np.uint32)
+            yield "insert", k, v
+        elif r < p_ins + p_del:
+            yield "delete", rng.choice(pool, size=delete_batch, p=w), None
+        else:
+            yield "probe", rng.choice(pool, size=probe_batch, p=w), None
+
+
 def dictionary_words(n: int = 350_000, seed: int = 3) -> np.ndarray:
     """Synthetic 'dictionary': Zipf-weighted letter n-grams dictionary-encoded
     to uint32 (paper Fig. 4 maps the first 350k words of a dictionary).

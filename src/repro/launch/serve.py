@@ -1,17 +1,29 @@
-"""Serving driver: batched decode with the HashMem-managed paged KV cache.
+"""Serving CLI: thin front-end over the request engine (repro.serving).
 
-Continuous-batching-lite: a fixed decode batch of B slots; when a sequence
-finishes, its pages are tombstone-freed through the HashMem page table
-(paper §2.5 deletion) and a new request takes the slot, with pages allocated
-by pim_malloc from the per-channel free lists.
+Two modes:
+
+  * ``decode`` (default) — batched LM decode with the HashMem-managed paged
+    KV cache.  Slot lifecycle and admission come from the serving engine's
+    ``SlotPool``; all page-table traffic in a step is COALESCED — one
+    batched HashMem delete for every sequence finishing in the step
+    (``free_seqs``) and one batched insert for every sequence admitted in
+    it (``alloc_seqs``) — and ``PageTableManager.tick()`` runs the
+    compaction triggers on the step clock, not just on frees.
+
+  * ``kv`` — the multi-tenant continuous-batching KV engine under a
+    YCSB-style load (repro.serving.engine + loadgen): per-tenant workloads
+    A-F, admission quotas, step-level op coalescing, JSON metrics.
 
 CPU-scale usage:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
       --requests 12 --batch 4 --max-new 16
+  PYTHONPATH=src python -m repro.launch.serve --mode kv \
+      --workloads A,B,E --requests 64 --slots 16
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -24,6 +36,7 @@ from repro.core.paged_kv import PageTableManager
 from repro.distributed import steps as dsteps
 from repro.launch.mesh import make_mesh
 from repro.models import model
+from repro.serving.engine import SlotPool
 
 
 def serve(cfg, mesh, *, batch=4, horizon=256, page_tokens=32, requests=8,
@@ -50,11 +63,7 @@ def serve(cfg, mesh, *, batch=4, horizon=256, page_tokens=32, requests=8,
                            compact_chain_len=compact_chain_len)
     rng = np.random.default_rng(seed)
 
-    # request queue
-    queue = [{"id": i,
-              "prompt": rng.integers(0, cfg.vocab_size, prompt_len).tolist(),
-              "out": []} for i in range(requests)]
-    slots = [None] * batch
+    pool = SlotPool(batch)
     block_tables = np.zeros((batch, ctx.n_pages), np.int32)
     pos = np.zeros((batch,), np.int32)
     tokens = np.zeros((batch, 1), np.int32)
@@ -62,31 +71,34 @@ def serve(cfg, mesh, *, batch=4, horizon=256, page_tokens=32, requests=8,
     t0 = time.time()
     steps_run = 0
 
-    def admit(slot):
-        if not queue:
-            slots[slot] = None
+    def place(newly):
+        """Coalesced admission: ONE page-table insert for every sequence
+        admitted this step, then per-slot decode-state reset."""
+        if not newly:
             return
-        req = queue.pop(0)
-        req["fed"] = 0
-        slots[slot] = req
-        phys = mgr.alloc_seq(req["id"], ctx.n_pages, group=slot // b_loc)
-        block_tables[slot] = phys
-        pos[slot] = 0
-        tokens[slot, 0] = req["prompt"][0]
-        req["fed"] = 1
+        phys = mgr.alloc_seqs([(req["id"], ctx.n_pages, slot // b_loc)
+                               for slot, req in newly])
+        for slot, req in newly:
+            block_tables[slot] = phys[req["id"]]
+            pos[slot] = 0
+            tokens[slot, 0] = req["prompt"][0]
+            req["fed"] = 1
 
-    for b in range(batch):
-        admit(b)
+    for i in range(requests):
+        pool.submit({"id": i,
+                     "prompt": rng.integers(0, cfg.vocab_size,
+                                            prompt_len).tolist(),
+                     "out": []})
+    place(pool.active())
 
-    while any(s is not None for s in slots):
+    while not pool.idle():
         bt = jnp.asarray(block_tables)
         nt, logits, states = step_fn(params, states, jnp.asarray(tokens),
                                      jnp.asarray(pos), bt)
         nt = np.asarray(nt)
         steps_run += 1
-        for b, req in enumerate(slots):
-            if req is None:
-                continue
+        finished = []
+        for b, req in pool.active():
             pos[b] += 1
             if req["fed"] < len(req["prompt"]):
                 tokens[b, 0] = req["prompt"][req["fed"]]   # prompt feeding
@@ -95,9 +107,14 @@ def serve(cfg, mesh, *, batch=4, horizon=256, page_tokens=32, requests=8,
                 req["out"].append(int(nt[b]))
                 tokens[b, 0] = int(nt[b])
                 if len(req["out"]) >= max_new or pos[b] >= horizon - 1:
-                    mgr.free_seq(req["id"])                # tombstone + recycle
-                    done.append(req)
-                    admit(b)
+                    finished.append((b, req))
+        # tombstone + recycle: ONE batched delete for the whole step
+        mgr.free_seqs([req["id"] for _, req in finished])
+        for b, req in finished:
+            pool.release(b)
+            done.append(req)
+        place(pool.refill())
+        mgr.tick()             # step-clock compaction (not only on frees)
 
     dt_val = time.time() - t0
     if verbose:
@@ -111,9 +128,36 @@ def serve(cfg, mesh, *, batch=4, horizon=256, page_tokens=32, requests=8,
     return done, mgr, steps_run
 
 
+def serve_kv(*, workloads="A", tenants=None, requests=64, slots=16,
+             shards=1, record_count=1024, ops_per_request=4,
+             max_pending=0, tenant_slots=0, seed=0, backend="ref",
+             verbose=True):
+    """Thin driver over the multi-tenant KV serving engine: one tenant per
+    workload letter (comma-separated), YCSB load phase, then a drained
+    continuous-batching run.  Returns (engine, metrics snapshot)."""
+    from repro.serving import build_ycsb_engine
+
+    wls = [w.strip().upper() for w in workloads.split(",") if w.strip()]
+    n_tenants = tenants or len(wls)
+    eng, gens = build_ycsb_engine(
+        [wls[i % len(wls)] for i in range(n_tenants)], slots=slots,
+        shards=shards, record_count=record_count,
+        ops_per_request=ops_per_request, backend=backend, seed=seed,
+        max_pending=max_pending, tenant_slots=tenant_slots)
+    per = requests // n_tenants
+    reqs = [r for g in gens for r in g.requests(per)]
+    eng.submit_all(reqs)
+    snap = eng.run()
+    if verbose:
+        print(json.dumps({**snap, "engine": eng.stats()}, indent=2,
+                         default=str))
+    return eng, snap
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", default="decode", choices=["decode", "kv"])
+    ap.add_argument("--arch", default=None, help="(decode mode) model arch")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
@@ -127,8 +171,27 @@ def main():
                     help="page-table compaction when any bucket chain "
                          "exceeds this many pages (skewed frees); default: "
                          "tombstone-fraction trigger only")
+    # kv-mode knobs (repro.serving)
+    ap.add_argument("--workloads", default="A",
+                    help="(kv mode) comma-separated YCSB letters, one "
+                         "tenant per entry, e.g. A,B,E")
+    ap.add_argument("--slots", type=int, default=16,
+                    help="(kv mode) concurrent request slots")
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--record-count", type=int, default=1024)
+    ap.add_argument("--ops-per-request", type=int, default=4)
     args = ap.parse_args()
 
+    if args.mode == "kv":
+        serve_kv(workloads=args.workloads, requests=args.requests,
+                 slots=args.slots, shards=args.shards,
+                 record_count=args.record_count,
+                 ops_per_request=args.ops_per_request,
+                 backend=args.backend)
+        return
+
+    if args.arch is None:
+        ap.error("--arch is required in decode mode")
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_mesh(tuple(args.mesh) if args.mesh else (1, 1),
                      ("data", "model"))

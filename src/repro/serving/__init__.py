@@ -1,0 +1,17 @@
+"""Multi-tenant continuous-batching serving layer over HashMem.
+
+  engine.py   — ServingEngine / SlotPool / Request: admission control,
+                slot lifecycle, step-level op coalescing (one vectorized
+                HashMem call per phase per shard per tick)
+  tenancy.py  — tenant-folded key space, quotas, per-tenant stats
+  metrics.py  — p50/p99 latency, throughput, occupancy, chain telemetry
+  loadgen.py  — YCSB-style workloads A-F (zipfian / uniform / latest)
+"""
+from repro.serving.engine import (   # noqa: F401
+    PAD_KEY, Request, ServingEngine, SlotPool,
+)
+from repro.serving.loadgen import (  # noqa: F401
+    LoadGen, WorkloadSpec, build_ycsb_engine, preload_engine,
+)
+from repro.serving.metrics import MetricsCollector  # noqa: F401
+from repro.serving.tenancy import Tenant, TenantRegistry, TenantSpace  # noqa: F401

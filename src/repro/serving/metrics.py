@@ -1,0 +1,128 @@
+"""Serving telemetry: latency percentiles, throughput, occupancy, chains.
+
+Everything is host-side and allocation-light: samples accumulate in plain
+Python lists / counters per tick and are reduced only in ``snapshot()``.
+Chain-length telemetry (the per-probe RLU command depth — the quantity the
+paper's overflow-chaining design trades space against) is sampled from the
+live HashMem on a throttle, since ``hashmap.stats`` is a device walk +
+host sync.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+
+def percentile(samples, q: float) -> float:
+    """q in [0, 100]; 0.0 for an empty sample set."""
+    if not len(samples):
+        return 0.0
+    return float(np.percentile(np.asarray(samples, np.float64), q))
+
+
+class MetricsCollector:
+    """Per-engine telemetry sink.
+
+    * ``record_request(ticks, seconds)`` — request completion latency, both
+      in engine ticks (scheduling depth) and wall seconds;
+    * ``record_tick(ops, occupancy, seconds)`` — per-tick throughput and
+      slot occupancy;
+    * ``record_ops(kind, n, hits)`` — op counts and probe hit rates;
+    * ``sample_chains(hm)`` — chain-length telemetry from a HashMem.
+    """
+
+    def __init__(self, chain_sample_every: int = 32):
+        self.t0 = time.perf_counter()
+        self.req_ticks: list[int] = []
+        self.req_secs: list[float] = []
+        self.tick_ops: list[int] = []
+        self.tick_secs: list[float] = []
+        self.occupancy: list[int] = []
+        self.ops = {k: 0 for k in
+                    ("read", "update", "insert", "delete", "scan", "rmw")}
+        self.hits = 0
+        self.probes = 0
+        self.chain_sample_every = chain_sample_every
+        self._ticks_since_chain_sample = 0
+        self.chain_samples: list[dict] = []
+
+    # -- recording ---------------------------------------------------------
+    def record_request(self, ticks: int, seconds: float):
+        self.req_ticks.append(ticks)
+        self.req_secs.append(seconds)
+
+    def record_tick(self, ops: int, occupancy: int, seconds: float):
+        self.tick_ops.append(ops)
+        self.occupancy.append(occupancy)
+        self.tick_secs.append(seconds)
+
+    def record_ops(self, kind: str, n: int, hits: int | None = None):
+        self.ops[kind] = self.ops.get(kind, 0) + n
+        if hits is not None:
+            self.probes += n
+            self.hits += hits
+
+    def sample_chains(self, hms) -> bool:
+        """Throttled chain-length sample over one HashMem or a list of
+        shards (aggregated, so a single hot shard is visible in max_chain);
+        returns True when it sampled."""
+        self._ticks_since_chain_sample += 1
+        if self._ticks_since_chain_sample < self.chain_sample_every:
+            return False
+        self._ticks_since_chain_sample = 0
+        self.force_chain_sample(hms)
+        return True
+
+    def force_chain_sample(self, hms):
+        from repro.core import hashmap
+        if not isinstance(hms, (list, tuple)):
+            hms = [hms]
+        cls = [np.asarray(hashmap.chain_lengths(hm)) for hm in hms]
+        cl = np.concatenate(cls)
+        self.chain_samples.append({
+            "tick": len(self.tick_ops),
+            "mean_chain": float(cl.mean()),
+            "max_chain": int(cl.max(initial=0)),
+            "max_chain_per_shard": [int(c.max(initial=0)) for c in cls],
+            "buckets": int(cl.shape[0]),
+        })
+
+    # -- reduction ---------------------------------------------------------
+    def snapshot(self) -> dict:
+        wall = time.perf_counter() - self.t0
+        total_ops = int(sum(self.tick_ops))
+        ticks = len(self.tick_ops)
+        return {
+            "wall_seconds": wall,
+            "ticks": ticks,
+            "total_ops": total_ops,
+            "ops_per_sec": total_ops / wall if wall > 0 else 0.0,
+            "ops_per_tick": total_ops / ticks if ticks else 0.0,
+            "requests_completed": len(self.req_ticks),
+            "request_latency_ticks": {
+                "p50": percentile(self.req_ticks, 50),
+                "p99": percentile(self.req_ticks, 99),
+                "max": float(max(self.req_ticks, default=0)),
+            },
+            "request_latency_ms": {
+                "p50": percentile(self.req_secs, 50) * 1e3,
+                "p99": percentile(self.req_secs, 99) * 1e3,
+            },
+            "tick_ms": {
+                "p50": percentile(self.tick_secs, 50) * 1e3,
+                "p99": percentile(self.tick_secs, 99) * 1e3,
+            },
+            "occupancy": {
+                "mean": float(np.mean(self.occupancy)) if self.occupancy
+                else 0.0,
+                "max": int(max(self.occupancy, default=0)),
+            },
+            "op_counts": dict(self.ops),
+            "probe_hit_rate": self.hits / self.probes if self.probes else 0.0,
+            "chain_telemetry": self.chain_samples[-8:],
+        }
+
+    def to_json(self, **extra) -> str:
+        return json.dumps({**self.snapshot(), **extra}, indent=2)

@@ -60,3 +60,59 @@ def test_kv_dataset_unique():
     q, idx = probe_set(keys, 0.1)
     assert len(q) == 1000
     assert np.isin(q, keys).all()
+
+
+def test_zipfian_weights_shape_and_skew():
+    from repro.data.kv_synth import zipfian_weights
+    w = zipfian_weights(1000, theta=0.99)
+    assert w.shape == (1000,)
+    assert abs(w.sum() - 1.0) < 1e-9
+    assert (np.diff(w) <= 0).all()               # monotone hot head
+    assert w[0] / w[-1] > 100                    # real skew at theta=0.99
+    u = zipfian_weights(1000, theta=0.0)         # theta=0 -> uniform
+    assert np.allclose(u, 1 / 1000)
+
+
+def test_ycsb_mix_catalog():
+    from repro.data.kv_synth import ycsb_default_dist, ycsb_mix
+    import pytest
+    for wl in "ABCDEF":
+        mix = ycsb_mix(wl)
+        assert abs(sum(mix.values()) - 1.0) < 1e-9
+        assert set(mix) <= {"read", "update", "insert", "scan", "rmw"}
+    assert ycsb_mix("C") == {"read": 1.0}
+    assert ycsb_mix("e")["scan"] == 0.95         # case-insensitive
+    assert ycsb_default_dist("D") == "latest"
+    with pytest.raises(KeyError):
+        ycsb_mix("Z")
+
+
+def test_zipfian_workload_stream():
+    from repro.data.kv_synth import zipfian_workload
+    ops = list(zipfian_workload(300, keyspace=64, seed=5))
+    assert len(ops) == 300
+    kinds = {op for op, _, _ in ops}
+    assert kinds == {"insert", "delete", "probe"}
+    for op, ks, vs in ops:
+        assert ks.dtype == np.uint32 and (ks < np.uint32(0xFFFFFFF0)).all()
+        assert (vs is None) == (op != "insert")
+    # zipfian skew: the hottest key appears far more often than the median
+    counts = {}
+    for _, ks, _ in ops:
+        for k in ks:
+            counts[int(k)] = counts.get(int(k), 0) + 1
+    c = sorted(counts.values(), reverse=True)
+    assert c[0] > 4 * c[len(c) // 2]
+    # deterministic for a fixed seed
+    again = list(zipfian_workload(300, keyspace=64, seed=5))
+    for (o1, k1, v1), (o2, k2, v2) in zip(ops, again):
+        assert o1 == o2 and (k1 == k2).all()
+
+
+def test_zipfian_workload_ycsb_mapping():
+    from repro.data.kv_synth import zipfian_workload
+    ops = [op for op, _, _ in zipfian_workload(400, keyspace=64,
+                                               workload="B", seed=9)]
+    frac_probe = ops.count("probe") / len(ops)
+    assert 0.8 < frac_probe <= 1.0               # B is read-mostly
+    assert ops.count("delete") < 0.15 * len(ops)

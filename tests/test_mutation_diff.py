@@ -337,3 +337,34 @@ def test_grow_preserves_probe_on_all_backends():
         v, f = hashmap.probe(hm, jnp.asarray(keys))
         assert bool(jnp.all(f)), backend
         assert bool(jnp.all(v == jnp.asarray(keys + 7))), backend
+
+
+def test_zipfian_workload_diff():
+    """The serving loadgen's Zipfian skew schedule (shared generator in
+    data/kv_synth.py) replayed through the differential harness path:
+    hot-key duplicate pileups + tombstone churn against the dict model."""
+    from repro.data.kv_synth import zipfian_workload
+    cfg = HashMemConfig(num_buckets=8, slots_per_page=32, overflow_pages=8,
+                        max_chain=4, backend="ref")
+    hm = hashmap.create(cfg)
+    m = DictModel()
+    for op, ks, vs in zipfian_workload(80, keyspace=96, theta=0.99,
+                                       workload="A", seed=11):
+        jk = jnp.asarray(ks)
+        if op == "insert":
+            hm, ok = hashmap.insert_auto(hm, jk, jnp.asarray(vs))
+            assert bool(jnp.all(ok))
+            m.insert(ks, vs, np.asarray(ok))
+        elif op == "delete":
+            hm, f = hashmap.delete(hm, jk)
+            assert (np.asarray(f) == m.delete(ks)).all()
+        else:
+            expv, expf = m.probe(ks)
+            v, f = hashmap.probe(hm, jk)
+            v, f = np.asarray(v), np.asarray(f)
+            expv, expf = np.asarray(expv, np.uint32), np.asarray(expf)
+            assert (f == expf).all()
+            assert (v[expf] == expv[expf]).all()
+    st = hashmap.stats(hm)
+    assert st["live_entries"] == m.live_entries()
+    assert st["max_chain"] <= hm.config.max_chain

@@ -143,3 +143,79 @@ def test_sliding_window_decode_page_bound():
                        kv_page_tokens=32)
     ctx = model.make_decode_ctx(cfg, scfg, 2)
     assert ctx.n_pages <= (cfg.sliding_window + 32) // 32 + 1
+
+
+def test_alloc_seqs_free_seqs_coalesced_equivalence():
+    """Batched alloc/free (one HashMem call per step) resolves to exactly
+    the same page tables as the per-sequence calls, and issues ONE batched
+    insert for the whole admission wave (counted via hashmap call hooks)."""
+    from repro.core import hashmap
+
+    mgr_a = PageTableManager(64, num_channels=2, backend="ref")
+    for s in range(3):
+        mgr_a.alloc_seq(s, 4)
+    mgr_b = PageTableManager(64, num_channels=2, backend="ref")
+    calls = {"n": 0}
+    orig_auto, orig_ins = hashmap.insert_auto, hashmap.insert
+
+    def count_auto(*a, **k):
+        calls["n"] += 1
+        return orig_auto(*a, **k)
+
+    def count_ins(*a, **k):
+        calls["n"] += 1
+        return orig_ins(*a, **k)
+
+    hashmap.insert_auto, hashmap.insert = count_auto, count_ins
+    try:
+        phys = mgr_b.alloc_seqs([(s, 4, 0) for s in range(3)])
+    finally:
+        hashmap.insert_auto, hashmap.insert = orig_auto, orig_ins
+    assert calls["n"] == 1                       # one call for 3 sequences
+    np.testing.assert_array_equal(mgr_a.block_table([0, 1, 2], 4),
+                                  mgr_b.block_table([0, 1, 2], 4))
+    for s in range(3):
+        np.testing.assert_array_equal(phys[s], mgr_b.owned[s])
+
+    mgr_b.free_seqs([0, 2])
+    assert sorted(mgr_b.owned) == [1]
+    t = mgr_b.block_table([1], 4)
+    np.testing.assert_array_equal(t[0], mgr_b.owned[1])
+    assert mgr_b.alloc_seqs([]) == {}            # empty wave is a no-op
+
+
+def test_manager_tick_compacts_without_frees():
+    """The engine-tick hook reclaims tombstones even when no free ever
+    happens again (maybe_compact used to run only inside free_seq)."""
+    from repro.configs.base import HashMemConfig
+
+    cfg = HashMemConfig(num_buckets=4, slots_per_page=4, overflow_pages=64,
+                        max_chain=8, backend="ref", auto_grow=False,
+                        compact_tombstone_frac=1.0, compact_chain_len=2)
+    mgr = PageTableManager(64, num_channels=1, hashmem_cfg=cfg)
+    # skewed alloc/free churn with the chain walk throttled so the frees
+    # themselves never observe the over-long chains
+    for r in range(3):
+        for s in range(6):
+            mgr.alloc_seq(100 * r + s, 2)
+        mgr._frees_since_chain_check = -10_000   # throttle holds during frees
+        mgr.free_seqs([100 * r + s for s in range(6)])
+    assert mgr.compact_events == 0
+    assert mgr._tombstones > 0
+    mgr._frees_since_chain_check = mgr.CHAIN_CHECK_EVERY
+    before = mgr.compact_events
+    for _ in range(mgr.CHAIN_CHECK_EVERY + 1):
+        mgr.tick()                               # no frees, tick clock only
+    assert mgr.compact_events > before
+    assert mgr._tombstones == 0
+
+
+def test_alloc_seq_zero_blocks():
+    """alloc_seq(s, 0) returns an empty table (pre-batching behavior), and
+    free_seq of it is a no-op."""
+    mgr = PageTableManager(32, num_channels=1, backend="ref")
+    bt = mgr.alloc_seq(7, 0)
+    assert bt.shape == (0,)
+    assert mgr.live_pages() == 0
+    mgr.free_seq(7)
+    assert mgr.compact_events == 0

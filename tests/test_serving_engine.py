@@ -1,0 +1,325 @@
+"""Serving engine: coalescing, admission control, differential correctness.
+
+The coalescing contract (ISSUE 4) is asserted two ways:
+
+  * engine-level — ``calls_last_tick`` counts the HashMem API calls a tick
+    issued: with coalescing ON it is at most one per op phase per shard, no
+    matter how many requests fed the tick;
+  * jaxpr-level — the ``scatters_per_insert`` counter (count_scatters) shows
+    the batched insert costs a CONSTANT 3 pool scatters regardless of batch
+    size, so a coalesced tick's insert scatter cost is 3 while the
+    per-request baseline pays 3 per op.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import HashMemConfig
+from repro.core import hashmap
+from repro.core.introspect import count_scatters
+from repro.serving import (MetricsCollector, Request, ServingEngine,
+                           TenantRegistry)
+
+from model import DictModel
+
+
+def _cfg(**kw):
+    base = dict(num_buckets=32, slots_per_page=16, overflow_pages=32,
+                max_chain=8, backend="ref")
+    base.update(kw)
+    return HashMemConfig(**base)
+
+
+def _engine(**kw):
+    kw.setdefault("max_slots", 8)
+    cfg = kw.pop("cfg", _cfg())
+    return ServingEngine(cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Coalescing
+# ---------------------------------------------------------------------------
+
+def test_one_batched_call_per_phase_per_tick():
+    """16 concurrent inserting requests -> ONE insert call in the tick."""
+    eng = _engine(max_slots=16)
+    eng.submit_all([Request(ops=[("insert", k, k + 1), ("read", k)])
+                    for k in range(16)])
+    eng.tick()
+    assert eng.calls_last_tick == {"probe": 0, "delete": 0, "insert": 1}
+    eng.tick()
+    assert eng.calls_last_tick == {"probe": 1, "delete": 0, "insert": 0}
+    # jaxpr-traced counter: the coalesced call is 3 pool scatters TOTAL,
+    # i.e. constant in the number of coalesced requests
+    keys = jnp.arange(16, dtype=jnp.uint32)
+    hm = hashmap.create(_cfg())
+    assert count_scatters(hashmap.insert, hm, keys, keys) == 3
+    assert count_scatters(hashmap.insert, hm, keys[:1], keys[:1]) == 3
+
+
+def test_mixed_tick_at_most_one_call_per_phase_per_shard():
+    for shards in (1, 2):
+        eng = _engine(max_slots=12, num_shards=shards)
+        eng.preload(np.arange(32, dtype=np.uint32),
+                    np.arange(32, dtype=np.uint32) + 7)
+        reqs = [Request(ops=[("read", k)]) for k in range(4)] + \
+               [Request(ops=[("update", k, 99)]) for k in range(4, 8)] + \
+               [Request(ops=[("delete", k)]) for k in range(8, 10)] + \
+               [Request(ops=[("rmw", k, 5)]) for k in range(10, 12)]
+        eng.submit_all(reqs)
+        eng.tick()
+        for kind in ("probe", "delete", "insert"):
+            assert 1 <= eng.calls_last_tick[kind] <= shards, \
+                (shards, kind, eng.calls_last_tick)
+
+
+def test_per_request_baseline_calls_scale_with_requests():
+    eng = _engine(max_slots=16, coalesce=False)
+    eng.submit_all([Request(ops=[("insert", k, k + 1)]) for k in range(16)])
+    eng.tick()
+    assert eng.calls_last_tick["insert"] == 16
+
+
+def test_coalesced_equals_per_request_results():
+    """Identical request stream, identical per-request results either way
+    (fixed phase order; distinct keys within a tick)."""
+    def build(coalesce):
+        eng = _engine(max_slots=4, coalesce=coalesce)
+        eng.preload(np.arange(16, dtype=np.uint32),
+                    np.arange(16, dtype=np.uint32) * 10)
+        reqs = [
+            Request(ops=[("read", 0), ("update", 0, 111), ("read", 0)]),
+            Request(ops=[("rmw", 1, 222), ("read", 1), ("delete", 1)]),
+            Request(ops=[("scan", 2, 4), ("insert", 100, 7), ("read", 100)]),
+            Request(ops=[("read", 15), ("delete", 15), ("read", 15)]),
+            Request(ops=[("read", 3), ("read", 100), ("scan", 0, 3)]),
+        ]
+        eng.submit_all(reqs)
+        eng.run()
+        return [r.results for r in reqs]
+
+    a, b = build(True), build(False)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Differential: engine semantics vs the dict model
+# ---------------------------------------------------------------------------
+
+def test_engine_differential_vs_dict_model():
+    """Random single-op requests (distinct keys per tick) replayed against
+    DictModel, which encodes the exact HashMem semantics: update is
+    tombstone-oldest + append, probe returns the oldest duplicate."""
+    rng = np.random.default_rng(7)
+    eng = _engine(max_slots=6, cfg=_cfg(num_buckets=16, overflow_pages=48))
+    m = DictModel()
+    keys0 = np.arange(24, dtype=np.uint32)
+    vals0 = rng.integers(1, 2**31, 24).astype(np.uint32)
+    eng.preload(keys0, vals0)
+    m.insert(keys0, vals0, np.ones(24, bool))
+
+    for round_ in range(30):
+        ks = rng.choice(40, size=6, replace=False)
+        reqs = []
+        for k in ks:
+            kind = rng.choice(["read", "update", "insert", "delete", "rmw"])
+            v = int(rng.integers(1, 2**31))
+            if kind == "read":
+                reqs.append(Request(ops=[("read", int(k))]))
+            elif kind == "delete":
+                reqs.append(Request(ops=[("delete", int(k))]))
+            elif kind == "insert":
+                reqs.append(Request(ops=[("insert", int(k), v)]))
+            elif kind == "update":
+                reqs.append(Request(ops=[("update", int(k), v)]))
+            else:
+                reqs.append(Request(ops=[("rmw", int(k), v)]))
+        eng.submit_all(reqs)
+        eng.tick()
+        # mirror the tick's phase order on the model: probe, delete, insert
+        expected = {}
+        for r in reqs:
+            op = r.ops[0]
+            if op[0] in ("read", "rmw"):
+                ev, ef = m.probe([op[1]])
+                expected[r.rid] = (ev[0], ef[0])
+        for r in reqs:
+            op = r.ops[0]
+            if op[0] in ("delete", "update", "rmw"):
+                m.delete([op[1]])
+        for r in reqs:
+            op = r.ops[0]
+            if op[0] in ("insert", "update", "rmw"):
+                m.insert([op[1]], [op[2]], [True])
+        for r in reqs:
+            res = r.results[0]
+            op = r.ops[0]
+            if op[0] == "read":
+                ev, ef = expected[r.rid]
+                assert res["found"] == ef and (not ef or res["value"] == ev)
+            elif op[0] == "rmw":
+                ev, ef = expected[r.rid]
+                assert res["found"] == ef and (not ef or res["old"] == ev)
+    st = hashmap.stats(eng.shards[0])
+    assert st["live_entries"] == m.live_entries()
+
+
+# ---------------------------------------------------------------------------
+# Admission control + slot lifecycle
+# ---------------------------------------------------------------------------
+
+def test_admission_queue_and_reject():
+    eng = _engine(max_slots=2, max_pending=3)
+    outcomes = [eng.submit(Request(ops=[("read", 0)])) for _ in range(7)]
+    assert outcomes == ["admitted", "admitted", "queued", "queued",
+                        "queued", "rejected", "rejected"]
+    snap = eng.run()
+    assert snap["requests_completed"] == 5      # rejected ones never run
+    assert eng.pool.idle()
+
+
+def test_tenant_slot_quota_throttles_concurrency():
+    reg = TenantRegistry()
+    greedy = reg.register("greedy", max_slots=1)
+    other = reg.register("other")
+    eng = _engine(max_slots=4, tenants=reg)
+    eng.submit_all([Request(ops=[("read", k), ("read", k)], tenant=greedy)
+                    for k in range(4)])
+    eng.submit_all([Request(ops=[("read", k)], tenant=other)
+                    for k in range(3)])
+    occ = []
+    while not eng.pool.idle():
+        eng.tick()
+        occ.append(eng._active_by_tenant.get(greedy.tid, 0))
+    assert max(occ) == 1                        # quota held every tick
+    assert greedy.stats["completed"] == 4       # but all work drained
+    assert other.stats["completed"] == 3
+
+
+def test_tenant_pending_quota_rejects():
+    reg = TenantRegistry()
+    t = reg.register("t", max_slots=1, max_pending=2)
+    eng = _engine(max_slots=4, tenants=reg)
+    outcomes = [eng.submit(Request(ops=[("read", 0)], tenant=t))
+                for _ in range(5)]
+    assert outcomes == ["admitted", "queued", "queued",
+                        "rejected", "rejected"]
+    assert t.stats["rejected"] == 2
+
+
+def test_slot_recycling_drains_backlog():
+    eng = _engine(max_slots=3)
+    n = 17
+    eng.submit_all([Request(ops=[("insert", k, k)]) for k in range(n)])
+    snap = eng.run()
+    assert snap["requests_completed"] == n
+    assert snap["occupancy"]["max"] == 3
+    v, f = hashmap.probe(eng.shards[0],
+                         jnp.arange(n, dtype=jnp.uint32))
+    assert bool(jnp.all(f))
+
+
+# ---------------------------------------------------------------------------
+# Engine-tick compaction + metrics
+# ---------------------------------------------------------------------------
+
+def test_tick_clock_compaction_without_further_deletes():
+    """Tombstones left by early deletes are reclaimed by the tick clock
+    even though no later request ever deletes (the maybe_compact-on-free
+    blind spot this PR fixes)."""
+    eng = _engine(max_slots=8, compact_every=4,
+                  cfg=_cfg(compact_tombstone_frac=0.0))
+    keys = np.arange(16, dtype=np.uint32)
+    eng.preload(keys, keys + 1)
+    eng.submit_all([Request(ops=[("delete", int(k))]) for k in keys[:6]])
+    eng.run()
+    assert eng.compact_events == 0               # tick clock not reached yet
+    assert hashmap.stats(eng.shards[0])["tombstones"] == 6
+    # read-only traffic from here on — compaction must still fire
+    eng.submit_all([Request(ops=[("read", int(k))] * 3)
+                    for k in np.tile(keys[6:14], 2)])
+    eng.run()
+    assert eng.compact_events >= 1
+    assert hashmap.stats(eng.shards[0])["tombstones"] == 0
+
+
+def test_metrics_snapshot_contents():
+    eng = _engine(max_slots=4, metrics=MetricsCollector(chain_sample_every=1))
+    eng.preload(np.arange(8, dtype=np.uint32), np.arange(8, dtype=np.uint32))
+    eng.submit_all([Request(ops=[("read", k % 8), ("update", k % 8, 5)])
+                    for k in range(6)])
+    snap = eng.run()
+    assert snap["requests_completed"] == 6
+    assert snap["total_ops"] == 12
+    assert snap["probe_hit_rate"] == 1.0
+    assert snap["request_latency_ticks"]["p99"] >= \
+        snap["request_latency_ticks"]["p50"] >= 2
+    assert snap["occupancy"]["max"] <= 4
+    assert snap["chain_telemetry"], "chain sampling never ran"
+    assert snap["op_counts"]["read"] == 6
+    assert eng.stats()["tenants"] == {}
+
+
+def test_scan_results():
+    eng = _engine(max_slots=2)
+    eng.preload(np.arange(10, dtype=np.uint32),
+                np.arange(10, dtype=np.uint32) * 2)
+    r = Request(ops=[("scan", 7, 5)])
+    eng.submit(r)
+    eng.run()
+    res = r.results[0]
+    assert res["values"][:3] == [14, 16, 18]
+    assert res["found"] == [True, True, True, False, False]
+
+
+@pytest.mark.parametrize("shards", [1, 3])
+def test_sharded_engine_correctness(shards):
+    eng = _engine(max_slots=4, num_shards=shards)
+    keys = np.arange(30, dtype=np.uint32)
+    eng.preload(keys, keys * 5)
+    reqs = [Request(ops=[("read", int(k))]) for k in keys]
+    eng.submit_all(reqs)
+    eng.run()
+    for k, r in zip(keys, reqs):
+        assert r.results[0] == {"op": "read", "key": int(k),
+                                "value": int(k) * 5, "found": True}
+
+
+def test_same_tick_write_contention_is_serialized():
+    """Two updates of one key submitted in the same tick must behave like
+    sequential updates (write-claim deferral): no leaked duplicate copies,
+    and a later read sees the LAST writer's value.  Coalesced and
+    per-request modes agree exactly."""
+    def run(coalesce):
+        eng = _engine(max_slots=8, coalesce=coalesce)
+        eng.preload(np.asarray([5], np.uint32), np.asarray([50], np.uint32))
+        r1 = Request(ops=[("update", 5, 111)])
+        r2 = Request(ops=[("update", 5, 222)])
+        eng.submit_all([r1, r2])
+        eng.tick()                               # r2's update is deferred
+        assert r1.results and not r2.results
+        eng.run()
+        eng.submit(Request(ops=[("update", 5, 333)]))
+        eng.run()
+        r4 = Request(ops=[("read", 5)])          # next tick: read-your-writes
+        eng.submit(r4)
+        eng.run()
+        live = hashmap.stats(eng.shards[0])["live_entries"]
+        return r4.results[0], live
+
+    for coalesce in (True, False):
+        res, live = run(coalesce)
+        assert live == 1, "same-tick updates leaked duplicate copies"
+        assert res == {"op": "read", "key": 5, "value": 333, "found": True}
+
+    # same-tick duplicate DELETES: exactly one removal per live copy,
+    # second delete observes the first (found=False once emptied)
+    eng = _engine(max_slots=8)
+    eng.preload(np.asarray([9], np.uint32), np.asarray([90], np.uint32))
+    d1 = Request(ops=[("delete", 9)])
+    d2 = Request(ops=[("delete", 9)])
+    eng.submit_all([d1, d2])
+    eng.run()
+    assert d1.results[0]["found"] is True
+    assert d2.results[0]["found"] is False
+    assert hashmap.stats(eng.shards[0])["live_entries"] == 0

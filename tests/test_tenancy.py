@@ -1,0 +1,136 @@
+"""Tenant key-space folding and cross-tenant isolation.
+
+The isolation property under test (ISSUE 4): tenant A's deletes, tombstone
+churn, and table GROWTH (auto-grow rebuilds re-bucket every live entry)
+never perturb tenant B's probe results — isolation is structural (disjoint
+folded key ranges), not scheduling luck.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import HashMemConfig
+from repro.core import hashmap
+from repro.serving import Request, ServingEngine, TenantRegistry
+from repro.serving.tenancy import TenantSpace
+
+
+# ---------------------------------------------------------------------------
+# Key folding
+# ---------------------------------------------------------------------------
+
+def test_fold_unfold_roundtrip():
+    sp = TenantSpace(bits=8)
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, sp.key_space, 1000).astype(np.uint32)
+    for tid in (0, 1, 17, sp.max_tenants - 1):
+        folded = sp.fold(tid, keys)
+        tids, raw = sp.unfold(folded)
+        assert (tids == tid).all()
+        assert (raw == keys).all()
+
+
+def test_fold_disjoint_across_tenants():
+    sp = TenantSpace(bits=8)
+    rng = np.random.default_rng(1)
+    keys = np.unique(rng.integers(0, sp.key_space, 4096).astype(np.uint32))
+    seen = {}
+    for tid in range(0, 24):
+        for f in sp.fold(tid, keys):
+            assert f not in seen, "folded collision across tenants"
+            seen[f] = tid
+    assert len(seen) == 24 * len(keys)
+
+
+def test_fold_sentinel_safety():
+    """No folded key may collide with EMPTY/TOMBSTONE or the PAD key."""
+    sp = TenantSpace(bits=8)
+    top = sp.fold(sp.max_tenants - 1, [sp.key_space - 1])[0]
+    assert top < 0xFFFFFFF0
+    with pytest.raises(AssertionError):
+        sp.fold(sp.max_tenants, [0])             # top id reserved
+    with pytest.raises(AssertionError):
+        sp.fold(0, [sp.key_space])               # key too wide
+
+
+def test_registry_assigns_distinct_ids():
+    reg = TenantRegistry()
+    a, b, c = reg.register("a"), reg.register("b"), reg.register(tid=7)
+    assert {a.tid, b.tid, c.tid} == {0, 1, 7}
+    d = reg.register("d")
+    assert d.tid not in (a.tid, b.tid, c.tid)
+    with pytest.raises(AssertionError):
+        reg.register(tid=7)
+
+
+# ---------------------------------------------------------------------------
+# Isolation under churn + growth
+# ---------------------------------------------------------------------------
+
+def _read_all(eng, tenant, keys):
+    reqs = [Request(ops=[("read", int(k))], tenant=tenant) for k in keys]
+    eng.submit_all(reqs)
+    eng.run()
+    return [(r.results[0]["value"], r.results[0]["found"]) for r in reqs]
+
+
+def test_tenant_isolation_under_deletes_and_growth():
+    reg = TenantRegistry()
+    a = reg.register("A")
+    b = reg.register("B")
+    # tiny pages + tight chain bound so tenant A's churn piles some bucket
+    # past max_chain -> insert refusal -> a real grow() rebuild
+    cfg = HashMemConfig(num_buckets=8, slots_per_page=4, overflow_pages=16,
+                        max_chain=2, backend="ref", auto_grow=True,
+                        max_load_factor=0.9)
+    eng = ServingEngine(cfg, max_slots=8, tenants=reg)
+    rng = np.random.default_rng(3)
+
+    bkeys = np.arange(40, dtype=np.uint32)
+    bvals = rng.integers(1, 2**31, 40).astype(np.uint32)
+    eng.preload(bkeys, bvals, tenant=b)
+    before = _read_all(eng, b, bkeys)
+    assert all(f for _, f in before)
+    assert [v for v, _ in before] == [int(v) for v in bvals]
+
+    # tenant A: heavy insert/delete churn on OVERLAPPING raw key ids —
+    # same raw ints as B's keys, different folded space
+    for round_ in range(6):
+        ks = rng.choice(64, size=8, replace=False)
+        eng.submit_all(
+            [Request(ops=[("insert", int(k), int(rng.integers(1, 2**31)))],
+                     tenant=a) for k in ks[:5]]
+            + [Request(ops=[("delete", int(k))], tenant=a) for k in ks[5:]])
+        eng.run()
+    assert eng.grow_events >= 1, "churn never forced a grow rebuild"
+
+    after = _read_all(eng, b, bkeys)
+    assert after == before, "tenant A's churn/growth perturbed tenant B"
+
+    # and B's deletes only ever remove B's entries
+    eng.submit_all([Request(ops=[("delete", int(k))], tenant=b)
+                    for k in bkeys[:10]])
+    eng.run()
+    gone = _read_all(eng, b, bkeys[:10])
+    assert not any(f for _, f in gone)
+    a_live = hashmap.stats(eng.shards[0])["live_entries"]
+    assert a_live > 0                            # A's entries untouched
+
+
+def test_tenant_stats_attribution():
+    reg = TenantRegistry()
+    a = reg.register("A")
+    b = reg.register("B")
+    eng = ServingEngine(HashMemConfig(num_buckets=32, slots_per_page=16,
+                                      overflow_pages=32, max_chain=8,
+                                      backend="ref"),
+                        max_slots=4, tenants=reg)
+    eng.preload(np.arange(8, dtype=np.uint32),
+                np.arange(8, dtype=np.uint32), tenant=a)
+    eng.submit_all([Request(ops=[("read", k)], tenant=a) for k in range(8)])
+    eng.submit_all([Request(ops=[("read", k)], tenant=b) for k in range(4)])
+    eng.run()
+    st = reg.stats()
+    assert st["A"]["ops"]["read"] == 8 and st["A"]["hits"] == 8
+    # B reads the same raw ids but ITS folded keys were never inserted
+    assert st["B"]["ops"]["read"] == 4 and st["B"]["misses"] == 4
+    assert st["A"]["completed"] == 8 and st["B"]["completed"] == 4
