@@ -1,8 +1,8 @@
 # Tier-1 verify (ROADMAP.md) — run verbatim.
 PYTHON ?= python
 
-.PHONY: test test-slow bench-kernels bench-json bench-serving bench-smoke \
-	lint ci
+.PHONY: test test-slow bench-kernels bench-json bench-serving \
+	bench-serving-mesh bench-smoke bench-check lint ci
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) -m pytest -x -q
@@ -24,14 +24,25 @@ bench-json:
 bench-serving:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) benchmarks/serving_bench.py --json
 
+# serving bench with mesh-backed shards on 4 forced host devices (adds
+# mesh / mesh_pipelined rows; no JSON append by default)
+bench-serving-mesh:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) benchmarks/serving_bench.py --mesh-shards 4
+
 # fast serving-bench smoke (no JSON write) for ci
 bench-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) benchmarks/serving_bench.py --smoke
+
+# perf-trajectory regression guard: newest BENCH_*.json run vs best prior
+# run, >1.5x fails (noisy eager metrics get a 2x band; tools/bench_check.py)
+bench-check:
+	$(PYTHON) tools/bench_check.py
 
 # ruff check (config in pyproject.toml); dependency-free fallback when the
 # container has no ruff (no pip installs allowed)
 lint:
 	$(PYTHON) tools/lint.py
 
-# the full gate: lint + tier-1 tests + a fast bench smoke
-ci: lint test bench-smoke
+# the full gate: lint + tier-1 tests + a fast bench smoke + perf guard
+ci: lint test bench-smoke bench-check

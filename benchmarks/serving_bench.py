@@ -1,20 +1,26 @@
-"""Serving-engine benchmark: coalesced ticks vs per-request HashMem calls.
+"""Serving-engine benchmark: coalesced ticks vs per-request HashMem calls,
+plus multi-tick op pipelining and (optionally) mesh-backed shards.
 
 Drives the multi-tenant continuous-batching engine (repro.serving) with the
-YCSB-style loadgen twice over the SAME request stream:
+YCSB-style loadgen over the SAME request stream in several modes:
 
   * ``coalesced``   — the engine's step-level coalescing: at most one
     vectorized probe/delete/insert call per shard per tick;
   * ``per_request`` — identical schedule, but one HashMem call per op
     (``coalesce=False``), i.e. the synchronous one-op-per-host-call serving
-    loop this PR replaces.
+    loop PR 3 replaced;
+  * ``pipelined``   — coalesced + pipeline_depth=2 (tick N+1's phases
+    issued while tick N's results are in flight; write-claim fence);
+  * ``--mesh-shards N`` adds mesh-backed rows (one rlu shard_map call per
+    phase per tick) — needs N jax devices, e.g.
+    XLA_FLAGS=--xla_force_host_platform_device_count=N.
 
-The acceptance bar (ISSUE 4): at 64 concurrent requests the coalesced
-engine sustains >= 5x the ops/sec of the per-request baseline — batching
-turns O(requests) host<->device round trips per tick into O(1).
+The PR-3 acceptance bar: at 64 concurrent requests the coalesced engine
+sustains >= 5x the ops/sec of the per-request baseline.
 
 ``--json`` APPENDS this run to ``BENCH_serving.json`` (a ``runs`` list), so
-the file keeps a per-PR perf trajectory like BENCH_kernels.json.
+the file keeps a per-PR perf trajectory like BENCH_kernels.json
+(tools/bench_check.py guards it against regressions).
 """
 from __future__ import annotations
 
@@ -27,20 +33,18 @@ from repro.serving import build_ycsb_engine
 
 
 def run_mode(*, coalesce, workloads, slots, shards, record_count,
-             ops_per_request, requests, seed) -> dict:
-    eng, gens = build_ycsb_engine(workloads, slots=slots, shards=shards,
-                                  record_count=record_count,
-                                  ops_per_request=ops_per_request,
-                                  coalesce=coalesce, seed=seed)
+             ops_per_request, requests, seed, pipeline=1, mesh=None,
+             tag="") -> dict:
+    kw = dict(slots=slots, shards=shards, record_count=record_count,
+              ops_per_request=ops_per_request, coalesce=coalesce,
+              pipeline_depth=pipeline, mesh=mesh)
+    eng, gens = build_ycsb_engine(workloads, seed=seed, **kw)
     per = requests // len(gens)
     reqs = [r for g in gens for r in g.requests(per)]
     # warmup: an identical engine (same config, slots => same padded batch
     # shapes) compiles every op-kind trace outside the timed window — the
     # module-level jit cache is shared, so the measured run is steady-state
-    warm, wgens = build_ycsb_engine(workloads, slots=slots, shards=shards,
-                                    record_count=record_count,
-                                    ops_per_request=ops_per_request,
-                                    coalesce=coalesce, seed=seed + 997)
+    warm, wgens = build_ycsb_engine(workloads, seed=seed + 997, **kw)
     warm.submit_all([r for g in wgens for r in g.requests(2 * slots
                                                           // len(wgens))])
     warm.run()
@@ -49,10 +53,13 @@ def run_mode(*, coalesce, workloads, slots, shards, record_count,
     eng.submit_all(reqs)
     snap = eng.run()
     wall = time.perf_counter() - t0
-    name = "coalesced" if coalesce else "per_request"
+    name = tag or ("coalesced" if coalesce else "per_request")
     return {
         "name": f"serving_{''.join(workloads)}_{slots}slots_{name}",
         "mode": name,
+        "pipeline_depth": pipeline,
+        "mesh_shards": eng.num_shards if mesh is not None else 0,
+        "stall_events": eng.stall_events,
         "concurrency": slots,
         "shards": shards,
         "requests": len(reqs),
@@ -87,6 +94,9 @@ def main():
     ap.add_argument("--ops-per-request", type=int, default=4)
     ap.add_argument("--workloads", default="A,B,E")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh-shards", type=int, default=0,
+                    help="also bench mesh-backed shards (needs that many "
+                         "jax devices; see module docstring)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny run for CI (make ci)")
     args = ap.parse_args()
@@ -103,14 +113,25 @@ def main():
               seed=args.seed)
     co = run_mode(coalesce=True, **kw)
     pr = run_mode(coalesce=False, **kw)
+    pi = run_mode(coalesce=True, pipeline=2, tag="pipelined", **kw)
+    rows = [co, pr, pi]
+    if args.mesh_shards:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.mesh_shards)
+        rows.append(run_mode(coalesce=True, mesh=mesh, tag="mesh", **kw))
+        rows.append(run_mode(coalesce=True, mesh=mesh, pipeline=2,
+                             tag="mesh_pipelined", **kw))
     speedup = co["ops_per_sec"] / pr["ops_per_sec"] if pr["ops_per_sec"] \
         else float("inf")
-    rows = [co, pr,
-            {"name": f"serving_speedup_{args.slots}slots",
-             "coalesced_ops_per_sec": co["ops_per_sec"],
-             "per_request_ops_per_sec": pr["ops_per_sec"],
-             "speedup": speedup,
-             "meets_5x_bar": speedup >= 5.0}]
+    rows.append({"name": f"serving_speedup_{args.slots}slots",
+                 "coalesced_ops_per_sec": co["ops_per_sec"],
+                 "per_request_ops_per_sec": pr["ops_per_sec"],
+                 "pipelined_ops_per_sec": pi["ops_per_sec"],
+                 "speedup": speedup,
+                 "pipelined_vs_coalesced":
+                     pi["ops_per_sec"] / co["ops_per_sec"]
+                     if co["ops_per_sec"] else float("inf"),
+                 "meets_5x_bar": speedup >= 5.0})
     for r in rows:
         print(r)
     if args.json:

@@ -472,9 +472,18 @@ def delete(hm: HashMem, keys: jax.Array):
     key lane of the row is rewritten — the value is the paper's "wasted
     space" until compact()."""
     cfg = hm.config
+    b = hash_to_bucket(keys.astype(U32), cfg.num_buckets, cfg.hash_fn,
+                       cfg.salt)
+    return delete_with_buckets(hm, keys, b)
+
+
+def delete_with_buckets(hm: HashMem, keys: jax.Array, b: jax.Array):
+    """``delete`` with caller-supplied bucket ids (the RLU channel layer
+    derives the local bucket from one global hash — see rlu.py)."""
+    cfg = hm.config
     slots = cfg.slots_per_page
     q = keys.astype(U32)
-    pages = resolve_pages(hm, q)                                           # (Q, C)
+    pages = resolve_pages_by_bucket(hm, b.astype(I32))                     # (Q, C)
     rows = hm.key_pages[jnp.maximum(pages, 0)]                             # (Q, C, S)
     match = (rows == q[:, None, None]) & (pages >= 0)[:, :, None]
     qn, C = pages.shape

@@ -11,9 +11,16 @@ contributed ops to the tick).
 from __future__ import annotations
 
 
-def count_scatters(fn, *args) -> int:
-    """Number of scatter primitives in fn's jaxpr (recursing into sub-jaxprs
-    — the structural 'pool scatters per op' the ROADMAP tracks)."""
+def count_primitive(fn, prefix: str, *args) -> int:
+    """Number of primitives whose name starts with ``prefix`` in fn's jaxpr,
+    recursing into sub-jaxprs (jit/cond/scan/shard_map bodies).
+
+    Used two ways: ``prefix='scatter'`` pins the unified PageStore's write
+    amplification (3 pool scatters per batch insert), and
+    ``prefix='shard_map'`` / ``prefix='all_to_all'`` pin the RLU mesh
+    contract — one coalesced serving phase lowers to exactly ONE routed
+    device call no matter how many requests or shards feed it.
+    """
     import jax
 
     n = 0
@@ -30,10 +37,16 @@ def count_scatters(fn, *args) -> int:
     def walk(j):
         nonlocal n
         for eq in j.eqns:
-            if eq.primitive.name.startswith("scatter"):
+            if eq.primitive.name.startswith(prefix):
                 n += 1
             for v in eq.params.values():
                 visit(v)
 
     walk(jax.make_jaxpr(fn)(*args).jaxpr)
     return n
+
+
+def count_scatters(fn, *args) -> int:
+    """Number of scatter primitives in fn's jaxpr (recursing into sub-jaxprs
+    — the structural 'pool scatters per op' the ROADMAP tracks)."""
+    return count_primitive(fn, "scatter", *args)

@@ -1,19 +1,32 @@
-"""RLU: orchestration between probe requests and HashMem shards.
+"""RLU: orchestration between probe/mutation requests and HashMem shards.
 
 Single-device: the RLU resolves each probe key to its page chain (the
 "command stream", hashmap.resolve_pages) and issues it to a compare backend.
 
 Multi-device ("channel-level parallelism", paper §6 — future work there,
-IMPLEMENTED here): buckets are partitioned across the mesh 'model' axis the
-way the paper spreads pages "across different channels and ranks ... to
-enable the parallel probing of pages".  One global hash h(key) defines
+IMPLEMENTED here): buckets are partitioned across a mesh axis the way the
+paper spreads pages "across different channels and ranks ... to enable the
+parallel probing of pages".  One global hash h(key) defines the routing;
+two routers are supported (``shard_by``):
 
-    owner shard  = h mod D
-    local bucket = (h div D) mod num_buckets_local
+    "mod"       owner = h mod D,                  local bucket = (h div D) mod B
+    "highbits"  owner = ((h >> 16) * D) >> 16,    local bucket = h mod B
 
-Probes are routed to owners with ``all_to_all``, probed locally with the
-configured kernel backend, and routed back — the TPU ICI plays the role of
-the paper's memory-channel fan-out.
+"mod" is the original channel split; "highbits" is the fastrange split over
+the hash's top 16 bits (any D, not just powers of two; pure uint32
+arithmetic — the container's jax runs without x64) whose local bucket is
+the plain ``hash_to_bucket`` assignment over the LOW bits — so a
+"highbits" shard is just an ordinary HashMem whose keys happen to route to
+it, and the default ``hashmap.grow`` rebucketing works per shard
+unchanged.  The serving engine uses "highbits" for its mesh-backed shards.
+
+Requests are routed to owners with ``all_to_all``, executed locally
+(probe with the configured kernel backend; delete/insert with the
+vectorized mutation engine), and routed back — the TPU ICI plays the role
+of the paper's memory-channel fan-out.  ``probe_sharded`` /
+``delete_sharded`` / ``insert_mesh`` are each ONE cached-jitted shard_map
+call per invocation: a serving tick's whole coalesced phase crosses the
+host<->mesh boundary once, no matter how many shards participate.
 
 Every shard is a full HashMem over the unified PageStore (one interleaved
 (P, S, 2) pool pytree per shard), so stacking shards for the mesh, the
@@ -26,6 +39,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import HashMemConfig
@@ -37,21 +51,78 @@ from repro.core.compat import shard_map
 U32 = jnp.uint32
 I32 = jnp.int32
 
+# Routing pad: below every sentinel, above every workload/tenant-folded key
+# (kv_synth keeps raw keys < 0xFFFFFFF0 and tenancy.py reserves the top
+# tenant id), so a padded routing slot probes/deletes nothing and an insert
+# treats it as invalid — shared with the serving engine's batch pad.
+ROUTE_PAD = np.uint32(0xFFFFFFF0)
 
-def owner_and_local_bucket(keys, cfg: HashMemConfig, num_shards: int):
-    h = HASH_FNS[cfg.hash_fn](keys.astype(U32), cfg.salt)
-    owner = (h % U32(num_shards)).astype(I32)
-    local = ((h // U32(num_shards)) % U32(cfg.num_buckets)).astype(I32)
+SHARD_ROUTERS = ("mod", "highbits")
+
+
+def _global_hash(keys, cfg: HashMemConfig):
+    return HASH_FNS[cfg.hash_fn](keys.astype(U32), cfg.salt)
+
+
+def _owner_from_hash(h, num_shards: int, shard_by: str):
+    """THE owner formula (jnp) — single definition shared by owner_of and
+    owner_and_local_bucket so a router change can't split routing between
+    the build path and the per-phase calls."""
+    if shard_by == "highbits":
+        return (((h >> U32(16)) * U32(num_shards)) >> U32(16)).astype(I32)
+    assert shard_by == "mod", shard_by
+    return (h % U32(num_shards)).astype(I32)
+
+
+def owner_of(keys, cfg: HashMemConfig, num_shards: int,
+             shard_by: str = "mod"):
+    """(N,) keys -> (N,) int32 owner shard ids under the chosen router."""
+    return _owner_from_hash(_global_hash(keys, cfg), num_shards, shard_by)
+
+
+def owner_of_np(keys, cfg: HashMemConfig, num_shards: int,
+                shard_by: str = "mod") -> np.ndarray:
+    """Host-side (numpy) mirror of ``owner_of`` — one vectorized call per
+    serving phase partitions a whole coalesced batch without touching the
+    device (see tests/test_hashing.py for the jnp<->np equivalence check)."""
+    k = np.asarray(keys, np.uint32)
+    if cfg.hash_fn == "murmur3_fmix":
+        h = k ^ np.uint32(cfg.salt)
+        h = h ^ (h >> np.uint32(16))
+        h = h * np.uint32(0x85EBCA6B)
+        h = h ^ (h >> np.uint32(13))
+        h = h * np.uint32(0xC2B2AE35)
+        h = h ^ (h >> np.uint32(16))
+    elif cfg.hash_fn == "mult_shift":
+        h = (k * np.uint32(2654435761)) ^ np.uint32(cfg.salt)
+    else:                                   # identity
+        h = k
+    if shard_by == "highbits":
+        return (((h >> np.uint32(16)) * np.uint32(num_shards))
+                >> np.uint32(16)).astype(np.int32)
+    assert shard_by == "mod", shard_by
+    return (h % np.uint32(num_shards)).astype(np.int32)
+
+
+def owner_and_local_bucket(keys, cfg: HashMemConfig, num_shards: int,
+                           shard_by: str = "mod"):
+    h = _global_hash(keys, cfg)
+    owner = _owner_from_hash(h, num_shards, shard_by)
+    if shard_by == "highbits":
+        local = (h % U32(cfg.num_buckets)).astype(I32)
+    else:
+        local = ((h // U32(num_shards)) % U32(cfg.num_buckets)).astype(I32)
     return owner, local
 
 
-def build_sharded(cfg: HashMemConfig, keys, vals, num_shards: int):
+def build_sharded(cfg: HashMemConfig, keys, vals, num_shards: int,
+                  shard_by: str = "mod"):
     """Build per-shard HashMems; returns a stacked pytree with leading axis
     num_shards (shard i's arrays at index i), ready to shard over 'model'.
 
     cfg.num_buckets is the PER-SHARD bucket count.
     """
-    owner, local = owner_and_local_bucket(keys, cfg, num_shards)
+    owner, local = owner_and_local_bucket(keys, cfg, num_shards, shard_by)
     shards = []
     for d in range(num_shards):
         m = owner == d
@@ -66,17 +137,20 @@ def build_sharded(cfg: HashMemConfig, keys, vals, num_shards: int):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
 
 
-def _local_bucket_fn(num_shards: int):
+def _local_bucket_fn(num_shards: int, shard_by: str = "mod"):
     """bucket_fn for hashmap.grow/insert on one shard: re-derive the local
     bucket from the global hash under the (possibly grown) shard config."""
     def fn(keys, cfg: HashMemConfig):
         h = HASH_FNS[cfg.hash_fn](keys.astype(U32), cfg.salt)
+        if shard_by == "highbits":
+            return (h % U32(cfg.num_buckets)).astype(I32)
         return ((h // U32(num_shards)) % U32(cfg.num_buckets)).astype(I32)
     return fn
 
 
 def insert_sharded(hm_stacked, keys, vals, cfg: HashMemConfig,
-                   num_shards: int, max_grows: int = 4):
+                   num_shards: int, max_grows: int = 4,
+                   shard_by: str = "mod"):
     """Host-level routed insert into the stacked shard pytree.
 
     Keys are routed to their owner shard (same global-hash split as
@@ -88,13 +162,12 @@ def insert_sharded(hm_stacked, keys, vals, cfg: HashMemConfig,
     Returns (hm_stacked', ok (N,) bool, cfg').  cfg' differs from cfg after
     growth; pass it to subsequent probe_sharded/insert_sharded calls.
     """
-    import numpy as np
     keys = jnp.asarray(keys).astype(U32)
     vals = jnp.asarray(vals).astype(U32)
     n = keys.shape[0]
-    owner, _ = owner_and_local_bucket(keys, cfg, num_shards)  # owner is
+    owner = owner_of(keys, cfg, num_shards, shard_by)         # owner is
     owner_np = np.asarray(owner)                              # grow-invariant
-    bfn = _local_bucket_fn(num_shards)
+    bfn = _local_bucket_fn(num_shards, shard_by)
     shards = [jax.tree.map(lambda x, d=d: x[d], hm_stacked)
               for d in range(num_shards)]
 
@@ -125,54 +198,175 @@ def insert_sharded(hm_stacked, keys, vals, cfg: HashMemConfig,
     return hm_stacked, jnp.asarray(ok), shards[0].config
 
 
-def _local_probe(hm_local, queries, cfg: HashMemConfig, num_shards: int):
-    _, local_bucket = owner_and_local_bucket(queries, cfg, num_shards)
+def _local_probe(hm_local, queries, cfg: HashMemConfig, num_shards: int,
+                 shard_by: str = "mod"):
+    _, local_bucket = owner_and_local_bucket(queries, cfg, num_shards,
+                                             shard_by)
     pages = hashmap.resolve_pages_by_bucket(hm_local, local_bucket)
     return probe_pages(hm_local, queries.astype(U32), pages, backend=cfg.backend)
 
 
+class _Route:
+    """Owner-routing bookkeeping for one shard's local queries: the send
+    buffer layout (stable argsort keeps intra-owner batch order, which is
+    what preserves duplicate-key FIFO semantics end to end) plus the gather
+    indices that un-route results."""
+
+    def __init__(self, q_local, owner, num_shards: int, c: int, pad):
+        qn = q_local.shape[0]
+        self.c = c
+        self.order = jnp.argsort(owner)          # stable
+        self.o_sorted = owner[self.order]
+        q_sorted = q_local[self.order].astype(U32)
+        # position within each owner group
+        start = jnp.searchsorted(self.o_sorted, self.o_sorted, side="left")
+        self.pos = jnp.arange(qn, dtype=I32) - start.astype(I32)
+        self.overflow = self.pos >= c
+        send = jnp.full((num_shards, c), pad, dtype=U32)
+        self.send = send.at[self.o_sorted, jnp.minimum(self.pos, c - 1)].set(
+            jnp.where(self.overflow, pad, q_sorted))
+        self.inv = jnp.argsort(self.order)
+
+    def send_aux(self, x_local, num_shards: int, fill):
+        """Route a second per-query array (e.g. insert values) the same way."""
+        xs = x_local[self.order].astype(U32)
+        send = jnp.full((num_shards, self.c), fill, dtype=U32)
+        return send.at[self.o_sorted, jnp.minimum(self.pos, self.c - 1)].set(
+            jnp.where(self.overflow, fill, xs))
+
+    def gather_back(self, back, mask_overflow: bool = False):
+        """(num_shards, c) routed-back results -> original query order."""
+        out = back[self.o_sorted, jnp.minimum(self.pos, self.c - 1)]
+        if mask_overflow:
+            out = out & ~self.overflow
+        return out[self.inv]
+
+
+# jitted shard_map'd phase calls, cached per (kind, mesh, axis, shard_by,
+# cfg, cap) so a serving engine's hot loop reuses ONE compiled executable
+# per phase per batch shape instead of re-tracing the shard_map every tick.
+_sharded_call_cache: dict = {}
+
+
+def _sharded_call(kind: str, mesh, cfg: HashMemConfig, axis: str,
+                  shard_by: str, cap: Optional[int]):
+    key = (kind, mesh, cfg, axis, shard_by, cap)
+    fn = _sharded_call_cache.get(key)
+    if fn is None:
+        num_shards = mesh.shape[axis]
+        builder = {"probe": _probe_shard_fn, "delete": _delete_shard_fn,
+                   "insert": _insert_shard_fn}[kind]
+        shard_fn, n_in = builder(cfg, num_shards, axis, shard_by, cap)
+        fn = jax.jit(shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(axis),) * n_in,
+            out_specs=(P(axis), P(axis)),
+            check_vma=False,
+        ))
+        _sharded_call_cache[key] = fn
+    return fn
+
+
+def _probe_shard_fn(cfg, num_shards, axis, shard_by, cap):
+    def shard_fn(hm_stacked_local, q_local):
+        hm_local = jax.tree.map(lambda x: x[0], hm_stacked_local)
+        c = cap or q_local.shape[0]
+        owner, _ = owner_and_local_bucket(q_local, cfg, num_shards, shard_by)
+        rt = _Route(q_local, owner, num_shards, c, EMPTY_KEY)
+        # route to owners: recv[s] = what shard s sent to me
+        recv = jax.lax.all_to_all(rt.send, axis, 0, 0, tiled=False)
+        rv, rf = _local_probe(hm_local, recv.reshape(-1), cfg, num_shards,
+                              shard_by)
+        back_v = jax.lax.all_to_all(rv.reshape(num_shards, c), axis, 0, 0,
+                                    tiled=False)
+        back_f = jax.lax.all_to_all(rf.reshape(num_shards, c), axis, 0, 0,
+                                    tiled=False)
+        return rt.gather_back(back_v), rt.gather_back(back_f,
+                                                      mask_overflow=True)
+    return shard_fn, 2
+
+
 def probe_sharded(mesh, hm_stacked, queries, cfg: HashMemConfig,
-                  axis: str = "model", cap: Optional[int] = None):
+                  axis: str = "model", cap: Optional[int] = None,
+                  shard_by: str = "mod"):
     """Channel-parallel probe: queries (Q,) sharded over `axis`.
 
     cap = per-(src,dst) routing capacity; None -> Q_local (always sufficient).
     Returns (values (Q,), found (Q,)) with the same sharding as queries.
     """
-    num_shards = mesh.shape[axis]
+    fn = _sharded_call("probe", mesh, cfg, axis, shard_by, cap)
+    return fn(hm_stacked, queries)
 
+
+def _delete_shard_fn(cfg, num_shards, axis, shard_by, cap):
     def shard_fn(hm_stacked_local, q_local):
         hm_local = jax.tree.map(lambda x: x[0], hm_stacked_local)
-        qn = q_local.shape[0]
-        c = cap or qn
-        owner, _ = owner_and_local_bucket(q_local, cfg, num_shards)
-        order = jnp.argsort(owner)
-        q_sorted = q_local[order].astype(U32)
-        o_sorted = owner[order]
-        # position within each owner group
-        start = jnp.searchsorted(o_sorted, o_sorted, side="left")
-        pos = jnp.arange(qn, dtype=I32) - start.astype(I32)
-        overflow = pos >= c
-        send = jnp.full((num_shards, c), EMPTY_KEY, dtype=U32)
-        send = send.at[o_sorted, jnp.minimum(pos, c - 1)].set(
-            jnp.where(overflow, EMPTY_KEY, q_sorted))
-        # route to owners: recv[s] = what shard s sent to me
-        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0, tiled=False)
-        rv, rf = _local_probe(hm_local, recv.reshape(-1), cfg, num_shards)
-        # route results back
-        back_v = jax.lax.all_to_all(rv.reshape(num_shards, c), axis, 0, 0, tiled=False)
-        back_f = jax.lax.all_to_all(rf.reshape(num_shards, c), axis, 0, 0, tiled=False)
-        v_sorted = back_v[o_sorted, jnp.minimum(pos, c - 1)]
-        f_sorted = back_f[o_sorted, jnp.minimum(pos, c - 1)] & ~overflow
-        inv = jnp.argsort(order)
-        return v_sorted[inv], f_sorted[inv]
+        c = cap or q_local.shape[0]
+        owner = owner_of(q_local, cfg, num_shards, shard_by)
+        rt = _Route(q_local, owner, num_shards, c, jnp.uint32(ROUTE_PAD))
+        recv = jax.lax.all_to_all(rt.send, axis, 0, 0, tiled=False)
+        flat = recv.reshape(-1)
+        _, lb = owner_and_local_bucket(flat, cfg, num_shards, shard_by)
+        # ROUTE_PAD never matches a stored row -> found=False, no write
+        hm2, found = hashmap.delete_with_buckets(hm_local, flat, lb)
+        back_f = jax.lax.all_to_all(found.reshape(num_shards, c), axis, 0, 0,
+                                    tiled=False)
+        hm_out = jax.tree.map(lambda x: x[None], hm2)
+        return hm_out, rt.gather_back(back_f, mask_overflow=True)
+    return shard_fn, 2
 
-    fn = shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(P(axis), P(axis)),
-        out_specs=(P(axis), P(axis)),
-        check_vma=False,
-    )
-    return fn(hm_stacked, queries)
+
+def delete_sharded(mesh, hm_stacked, keys, cfg: HashMemConfig,
+                   axis: str = "model", cap: Optional[int] = None,
+                   shard_by: str = "mod"):
+    """Channel-parallel batched tombstone delete: ONE shard_map call routes
+    every key to its owner shard, deletes locally, and routes the found
+    mask back.  Returns (hm_stacked', found (Q,)).  Mirrors
+    ``hashmap.delete`` semantics per owner shard (duplicate queries resolve
+    to one removal)."""
+    fn = _sharded_call("delete", mesh, cfg, axis, shard_by, cap)
+    return fn(hm_stacked, keys)
+
+
+def _insert_shard_fn(cfg, num_shards, axis, shard_by, cap):
+    def shard_fn(hm_stacked_local, q_local, v_local):
+        hm_local = jax.tree.map(lambda x: x[0], hm_stacked_local)
+        c = cap or q_local.shape[0]
+        owner, _ = owner_and_local_bucket(q_local, cfg, num_shards, shard_by)
+        rt = _Route(q_local, owner, num_shards, c, jnp.uint32(ROUTE_PAD))
+        recv_k = jax.lax.all_to_all(rt.send, axis, 0, 0, tiled=False)
+        recv_v = jax.lax.all_to_all(
+            rt.send_aux(v_local, num_shards, jnp.uint32(0)), axis, 0, 0,
+            tiled=False)
+        flat_k = recv_k.reshape(-1)
+        valid = flat_k != jnp.uint32(ROUTE_PAD)
+        _, lb = owner_and_local_bucket(flat_k, cfg, num_shards, shard_by)
+        hm2, ok = hashmap.insert_with_buckets(hm_local, flat_k,
+                                              recv_v.reshape(-1), lb,
+                                              valid=valid)
+        back_ok = jax.lax.all_to_all(ok.reshape(num_shards, c), axis, 0, 0,
+                                     tiled=False)
+        hm_out = jax.tree.map(lambda x: x[None], hm2)
+        return hm_out, rt.gather_back(back_ok, mask_overflow=True)
+    return shard_fn, 3
+
+
+def insert_mesh(mesh, hm_stacked, keys, vals, cfg: HashMemConfig,
+                axis: str = "model", cap: Optional[int] = None,
+                shard_by: str = "mod"):
+    """Channel-parallel FIXED-ARENA batched insert: one shard_map call
+    routes keys/values to owner shards and appends with the vectorized
+    mutation engine.  Returns (hm_stacked', ok (Q,)).
+
+    ok=False elements were refused (PR_ERROR: arena/chain bound) — shapes
+    cannot change inside shard_map, so growth is the caller's host-level
+    fallback (``insert_sharded``, which keeps all shards shape-homogeneous).
+    Keys equal to ROUTE_PAD are padding: never stored, always ok=False.
+    Duplicate keys keep global batch order (flat order == (source shard,
+    local position) lexicographic == recv concatenation order).
+    """
+    fn = _sharded_call("insert", mesh, cfg, axis, shard_by, cap)
+    return fn(hm_stacked, keys, vals)
 
 
 def probe_replicated(mesh, hm, queries, cfg: HashMemConfig, axis: str = "data"):

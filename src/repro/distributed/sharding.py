@@ -95,6 +95,26 @@ def batch_specs(cfg, mesh: Mesh, batch_tree):
     return out
 
 
+# ---------------------------------------------------------------------------
+# Stacked-HashMem placement (serving-engine mesh shards; core/rlu.py)
+# ---------------------------------------------------------------------------
+
+def stacked_hashmem_specs(hm_stacked, axis: str = "model"):
+    """PartitionSpec tree for a stacked shard pytree (leading dim =
+    num_shards): every leaf shards its leading axis over ``axis``, which
+    places exactly one HashMem shard per device along the mesh axis."""
+    return jax.tree.map(lambda _: P(axis), hm_stacked)
+
+
+def shard_stacked_hashmem(mesh: Mesh, hm_stacked, axis: str = "model"):
+    """Place a stacked shard pytree onto the mesh (one shard per device on
+    ``axis``).  Done once at table build/growth time so the per-tick RLU
+    calls (probe_sharded / delete_sharded / insert_mesh) start from
+    device-resident shards instead of resharding host arrays every call."""
+    return jax.device_put(
+        hm_stacked, named(mesh, stacked_hashmem_specs(hm_stacked, axis)))
+
+
 class ShardCtx:
     """Activation sharding constraints threaded through the model.
 

@@ -35,3 +35,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary (test-sized) mesh with the same axis semantics."""
     return _make_mesh_compat(shape, axes)
+
+
+def make_serving_mesh(num_shards: int = 0, axis: str = "model"):
+    """1-D mesh for the mesh-backed ServingEngine: ``num_shards`` devices on
+    the channel ('model') axis, one HashMem shard each.  0 -> all devices.
+    """
+    n = num_shards or len(jax.devices())
+    assert n <= len(jax.devices()), \
+        f"serving mesh wants {n} devices, have {len(jax.devices())}"
+    return _make_mesh_compat((n,), (axis,))

@@ -131,19 +131,26 @@ def serve(cfg, mesh, *, batch=4, horizon=256, page_tokens=32, requests=8,
 def serve_kv(*, workloads="A", tenants=None, requests=64, slots=16,
              shards=1, record_count=1024, ops_per_request=4,
              max_pending=0, tenant_slots=0, seed=0, backend="ref",
-             verbose=True):
+             mesh_shards=0, pipeline=1, verbose=True):
     """Thin driver over the multi-tenant KV serving engine: one tenant per
     workload letter (comma-separated), YCSB load phase, then a drained
-    continuous-batching run.  Returns (engine, metrics snapshot)."""
+    continuous-batching run.  ``mesh_shards`` > 0 routes the table through
+    the RLU mesh path (one shard per device on a 1-D 'model' mesh — needs
+    that many jax devices, e.g. via
+    XLA_FLAGS=--xla_force_host_platform_device_count=N); ``pipeline`` > 1
+    enables multi-tick op pipelining.  Returns (engine, metrics snapshot)."""
+    from repro.launch.mesh import make_serving_mesh
     from repro.serving import build_ycsb_engine
 
     wls = [w.strip().upper() for w in workloads.split(",") if w.strip()]
     n_tenants = tenants or len(wls)
+    mesh = make_serving_mesh(mesh_shards) if mesh_shards else None
     eng, gens = build_ycsb_engine(
         [wls[i % len(wls)] for i in range(n_tenants)], slots=slots,
         shards=shards, record_count=record_count,
         ops_per_request=ops_per_request, backend=backend, seed=seed,
-        max_pending=max_pending, tenant_slots=tenant_slots)
+        max_pending=max_pending, tenant_slots=tenant_slots, mesh=mesh,
+        pipeline_depth=pipeline)
     per = requests // n_tenants
     reqs = [r for g in gens for r in g.requests(per)]
     eng.submit_all(reqs)
@@ -180,6 +187,13 @@ def main():
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--record-count", type=int, default=1024)
     ap.add_argument("--ops-per-request", type=int, default=4)
+    ap.add_argument("--mesh-shards", type=int, default=0,
+                    help="(kv mode) >0: mesh-backed shards, one per device "
+                         "on a 1-D 'model' mesh (set XLA_FLAGS to force "
+                         "host devices); 0: host-routed shards")
+    ap.add_argument("--pipeline", type=int, default=1,
+                    help="(kv mode) multi-tick op pipelining depth "
+                         "(1 = off)")
     args = ap.parse_args()
 
     if args.mode == "kv":
@@ -187,7 +201,8 @@ def main():
                  slots=args.slots, shards=args.shards,
                  record_count=args.record_count,
                  ops_per_request=args.ops_per_request,
-                 backend=args.backend)
+                 backend=args.backend, mesh_shards=args.mesh_shards,
+                 pipeline=args.pipeline)
         return
 
     if args.arch is None:

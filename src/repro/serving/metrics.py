@@ -65,8 +65,10 @@ class MetricsCollector:
             self.hits += hits
 
     def sample_chains(self, hms) -> bool:
-        """Throttled chain-length sample over one HashMem or a list of
-        shards (aggregated, so a single hot shard is visible in max_chain);
+        """Throttled chain-length sample over one HashMem, a list of shards
+        (aggregated, so a single hot shard is visible in max_chain), or a
+        zero-arg callable producing either — the mesh-backed engine passes a
+        callable so shard views are only materialized on sampled ticks;
         returns True when it sampled."""
         self._ticks_since_chain_sample += 1
         if self._ticks_since_chain_sample < self.chain_sample_every:
@@ -77,6 +79,8 @@ class MetricsCollector:
 
     def force_chain_sample(self, hms):
         from repro.core import hashmap
+        if callable(hms):
+            hms = hms()
         if not isinstance(hms, (list, tuple)):
             hms = [hms]
         cls = [np.asarray(hashmap.chain_lengths(hm)) for hm in hms]

@@ -65,7 +65,7 @@ class Tenant:
     max_pending: int = 0
     stats: dict = field(default_factory=lambda: {
         "submitted": 0, "rejected": 0, "queued": 0, "admitted": 0,
-        "completed": 0,
+        "completed": 0, "killed": 0,
         "ops": {"read": 0, "update": 0, "insert": 0, "delete": 0,
                 "scan": 0, "rmw": 0},
         "hits": 0, "misses": 0,

@@ -74,3 +74,90 @@ class DictModel:
 
     def keys(self):
         return list(self.d.keys())
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine differential harness (shared by the in-process tests and the
+# multi-device subprocess tests — keep this module import-light)
+# ---------------------------------------------------------------------------
+
+def make_engine_schedule(seed: int, n_requests: int = 24,
+                         ops_per_request: int = 3, keyspace: int = 64,
+                         zipf_theta: float = 0.0):
+    """Deterministic random request streams (lists of op tuples) for the
+    serving-engine differential tests.  ``zipf_theta`` > 0 skews key choice
+    (YCSB-style hot keys -> heavy same-tick write contention and claim
+    deferrals); 0 = uniform."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    if zipf_theta > 0:
+        ranks = np.arange(1, keyspace + 1, dtype=np.float64)
+        w = (1.0 / ranks ** zipf_theta)
+        w /= w.sum()
+    else:
+        w = None
+
+    def key():
+        return int(rng.choice(keyspace, p=w))
+
+    kinds = ["read", "update", "insert", "delete", "rmw", "scan"]
+    probs = [0.28, 0.22, 0.20, 0.12, 0.10, 0.08]
+    streams = []
+    for _ in range(n_requests):
+        ops = []
+        for _ in range(ops_per_request):
+            kind = kinds[int(rng.choice(len(kinds), p=probs))]
+            v = int(rng.integers(1, 2**30))
+            if kind == "read":
+                ops.append(("read", key()))
+            elif kind == "update":
+                ops.append(("update", key(), v))
+            elif kind == "insert":
+                ops.append(("insert", key(), v))
+            elif kind == "delete":
+                ops.append(("delete", key()))
+            elif kind == "rmw":
+                ops.append(("rmw", key(), v))
+            else:
+                ops.append(("scan", key(), int(rng.integers(1, 4))))
+        streams.append(ops)
+    return streams
+
+
+def replay_schedule_against_model(schedule, model: "DictModel" = None):
+    """Replay a ServingEngine ``record_schedule`` log against the DictModel
+    and assert every recorded result.  The log is in gather order; within a
+    tick the engine executes fixed phases (probe -> delete -> insert), so
+    the model is driven phase by phase per tick.  Returns the model."""
+    model = model or DictModel()
+    by_tick: dict = {}
+    for tick, kind, keys, val, res in schedule:
+        by_tick.setdefault(tick, []).append((kind, keys, val, res))
+    for tick in sorted(by_tick):
+        ops = by_tick[tick]
+        # phase 1: probes (read / scan / rmw pre-read)
+        for kind, keys, val, res in ops:
+            if kind == "read" or kind == "rmw":
+                ev, ef = model.probe([keys[0]])
+                field = "value" if kind == "read" else "old"
+                assert res["found"] == ef[0], (tick, kind, keys, res)
+                if ef[0]:
+                    assert res[field] == ev[0], (tick, kind, keys, res)
+            elif kind == "scan":
+                ev, ef = model.probe(list(keys))
+                assert res["found"] == ef, (tick, keys, res)
+                for i, f in enumerate(ef):
+                    if f:
+                        assert res["values"][i] == ev[i], (tick, keys, res)
+        # phase 2: deletes (delete / update / rmw tombstone)
+        for kind, keys, val, res in ops:
+            if kind in ("delete", "update", "rmw"):
+                ef = model.delete([keys[0]])
+                field = "found" if kind == "delete" else "replaced"
+                assert res[field] == ef[0], (tick, kind, keys, res)
+        # phase 3: inserts (insert / update / rmw append), gated on the
+        # engine's own ok verdict so fixed-arena refusals stay in sync
+        for kind, keys, val, res in ops:
+            if kind in ("insert", "update", "rmw"):
+                model.insert([keys[0]], [val], [res["ok"]])
+    return model

@@ -1,0 +1,218 @@
+"""Driver for the mesh-backed ServingEngine differential tests.
+
+Runs INSIDE the multi-device subprocesses spawned by
+tests/test_serving_sharded.py (XLA_FLAGS=--xla_force_host_platform_device_count
+must be set before jax import, so the pytest process itself stays
+single-device).  PYTHONPATH includes both src/ and tests/.
+
+One ``sweep`` call runs many randomized schedules; for each schedule the
+same request streams are executed by
+
+  * the host-shard engine (coalesced)        — the PR-3 reference path;
+  * the mesh engine, pipelining OFF (depth 1);
+  * the mesh engine, pipelining ON  (each depth in ``depths``);
+  * every Nth schedule: the mesh engine with coalesce=False (per-request);
+
+and every run is checked three ways: results bit-equal to the host
+reference, the recorded schedule replays exactly against the DictModel
+(the sequential serialization witness), and per-shard state is consistent
+— shard live entries sum to the model population and every shard holds
+only keys the RLU router assigns to it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import HashMemConfig
+from repro.core import rlu
+from repro.launch.mesh import make_serving_mesh
+from repro.serving import Request, ServingEngine
+
+from model import DictModel, make_engine_schedule, replay_schedule_against_model
+
+
+def _cfg(auto_grow: bool = True) -> HashMemConfig:
+    return HashMemConfig(num_buckets=16, slots_per_page=8, overflow_pages=32,
+                         max_chain=4, backend="ref", auto_grow=auto_grow)
+
+
+def run_streams(streams, *, cfg, mesh=None, num_shards=2, coalesce=True,
+                pipeline_depth=1, max_slots=8, preload=None):
+    eng = ServingEngine(cfg, mesh=mesh, num_shards=num_shards,
+                        max_slots=max_slots, coalesce=coalesce,
+                        pipeline_depth=pipeline_depth, record_schedule=True)
+    if preload is not None:
+        eng.preload(*preload)
+    reqs = [Request(ops=list(ops)) for ops in streams]
+    eng.submit_all(reqs)
+    eng.run()
+    return eng, [r.results for r in reqs]
+
+
+def check_shard_state(eng, model):
+    """Per-shard invariants: live entries sum to the model population and
+    every live key lives on the shard the router assigns it to."""
+    shards = eng.shards
+    total = 0
+    for s, hm in enumerate(shards):
+        kp = np.asarray(hm.key_pages).reshape(-1)
+        live = kp[(kp != np.uint32(0xFFFFFFFF)) & (kp != np.uint32(0xFFFFFFFE))]
+        total += live.size
+        if eng.backend.is_mesh and live.size:
+            owners = rlu.owner_of_np(live, eng.backend.cfg, eng.num_shards,
+                                     eng.shard_by)
+            assert (owners == s).all(), \
+                f"shard {s} holds foreign keys {live[owners != s][:8]}"
+    assert total == model.live_entries(), (total, model.live_entries())
+
+
+def one_schedule(seed: int, mesh, depths=(2,), per_request: bool = False,
+                 zipf_theta: float = 0.0):
+    streams = make_engine_schedule(seed, n_requests=16, ops_per_request=3,
+                                   keyspace=48, zipf_theta=zipf_theta)
+    rng = np.random.default_rng(seed)
+    pk = rng.choice(48, 16, replace=False).astype(np.uint32)
+    pv = rng.integers(1, 2**30, 16).astype(np.uint32)
+    preload = (pk, pv)
+
+    host, ref = run_streams(streams, cfg=_cfg(), num_shards=2,
+                            preload=preload)
+    model = replay_schedule_against_model(host.schedule, _seeded_model(pk, pv))
+    check_shard_state(host, model)
+
+    runs = {"mesh_d1": dict(mesh=mesh, pipeline_depth=1)}
+    for d in depths:
+        runs[f"mesh_d{d}"] = dict(mesh=mesh, pipeline_depth=d)
+    if per_request:
+        runs["mesh_per_request"] = dict(mesh=mesh, coalesce=False)
+    for name, kw in runs.items():
+        eng, results = run_streams(streams, cfg=_cfg(), preload=preload, **kw)
+        assert results == ref, \
+            (name, seed, [d for d in zip(ref, results) if d[0] != d[1]][:1])
+        m = replay_schedule_against_model(eng.schedule, _seeded_model(pk, pv))
+        check_shard_state(eng, m)
+    return True
+
+
+def _seeded_model(pk, pv):
+    m = DictModel()
+    m.insert(pk, pv, np.ones(len(pk), bool))
+    return m
+
+
+def sweep(seed0: int, n: int, depths=(2,), zipfian: str = "mixed",
+          per_request_every: int = 8):
+    """zipfian: "none" (uniform keys), "all" (every schedule contended),
+    or "mixed" (alternate)."""
+    mesh = make_serving_mesh()     # all forced devices
+    for i in range(n):
+        seed = seed0 + i
+        hot = {"none": False, "all": True, "mixed": bool(i % 2)}[zipfian]
+        one_schedule(seed, mesh, depths=depths,
+                     per_request=(i % per_request_every == 0),
+                     zipf_theta=0.99 if hot else 0.0)
+    print(f"SWEEP OK {n} schedules (seeds {seed0}..{seed0 + n - 1})")
+
+
+def grow_under_pipeline(seed: int = 5):
+    """Force synchronized growth inside a pipelined window: tiny arena +
+    insert-heavy streams; assert no lost or duplicated keys vs the model."""
+    mesh = make_serving_mesh()
+    cfg = HashMemConfig(num_buckets=4, slots_per_page=4, overflow_pages=8,
+                        max_chain=2, backend="ref", auto_grow=True,
+                        max_load_factor=0.95)
+    rng = np.random.default_rng(seed)
+    streams = []
+    for r in range(48):
+        ops = []
+        for _ in range(3):
+            k, v = int(rng.integers(0, 96)), int(rng.integers(1, 2**20))
+            kind = rng.choice(["insert", "update", "read", "delete"],
+                              p=[0.5, 0.2, 0.2, 0.1])
+            ops.append({"insert": ("insert", k, v), "update": ("update", k, v),
+                        "read": ("read", k), "delete": ("delete", k)}[kind])
+        streams.append(ops)
+
+    ref_eng, ref = run_streams(streams, cfg=cfg, num_shards=2)
+    eng, results = run_streams(streams, cfg=cfg, mesh=mesh, pipeline_depth=2)
+    assert eng.grow_events >= 1, "schedule never forced a grow"
+    assert results == ref
+    model = replay_schedule_against_model(eng.schedule, DictModel())
+    check_shard_state(eng, model)
+    # no lost keys: every model entry probes back with the oldest value
+    keys = np.asarray(model.keys(), np.uint32)
+    if keys.size:
+        exp = np.asarray([model.d[int(k)][0] for k in keys], np.uint32)
+        got = np.zeros(len(keys), np.uint32)
+        fnd = np.zeros(len(keys), bool)
+        for s, hm in enumerate(eng.shards):
+            owners = rlu.owner_of_np(keys, eng.backend.cfg, eng.num_shards,
+                                     eng.shard_by)
+            m = owners == s
+            if m.any():
+                import jax.numpy as jnp
+                v, f = rlu._local_probe(hm, jnp.asarray(keys[m]),
+                                        eng.backend.cfg, eng.num_shards,
+                                        eng.shard_by)
+                got[m], fnd[m] = np.asarray(v), np.asarray(f)
+        assert fnd.all(), "grow lost keys"
+        assert (got == exp).all(), "grow corrupted values"
+    # no duplicated keys: per-key copy counts match the model exactly
+    counts: dict = {}
+    for hm in eng.shards:
+        kp = np.asarray(hm.key_pages).reshape(-1)
+        live = kp[(kp != np.uint32(0xFFFFFFFF)) & (kp != np.uint32(0xFFFFFFFE))]
+        for k in live:
+            counts[int(k)] = counts.get(int(k), 0) + 1
+    assert counts == {k: len(v) for k, v in model.d.items()}, \
+        "grow duplicated keys"
+    print("GROW-UNDER-PIPELINE OK", eng.grow_events, "grows,",
+          eng.stall_events, "stalls")
+
+
+def kill_mid_pipeline(seed: int = 11):
+    """Kill a request between pipelined ticks (its ops partially issued and
+    still in flight); assert the slot is reclaimed and reused, remaining
+    ops never execute, and the table state matches the model built from
+    what actually ran."""
+    from repro.distributed.fault_tolerance import FailureInjector, \
+        InjectedFailure
+    mesh = make_serving_mesh()
+    cfg = _cfg()
+    eng = ServingEngine(cfg, mesh=mesh, max_slots=4, pipeline_depth=2,
+                        record_schedule=True)
+    victim = Request(ops=[("insert", 100, 1), ("insert", 101, 2),
+                          ("insert", 102, 3), ("insert", 103, 4)])
+    others = [Request(ops=[("insert", k, k), ("read", k), ("read", k)])
+              for k in range(8)]
+    eng.submit_all([victim] + others)
+    backlog = [Request(ops=[("read", k)]) for k in range(4)]
+
+    inj = FailureInjector(fail_at_steps=(2,))
+    while not eng.pool.idle() or eng._inflight:
+        try:
+            inj.check(eng.ticks)
+        except InjectedFailure:
+            # client died mid-flight: tick 2's ops are issued but undrained
+            assert eng._inflight, "expected in-flight work at the kill point"
+            assert eng.kill(victim)
+            eng.submit_all(backlog)       # freed slot must be reusable
+        if eng.pool.idle() and eng._inflight:
+            eng.flush()
+        else:
+            eng.tick()
+    assert victim.killed and victim.cursor < len(victim.ops), \
+        "victim ran to completion despite the kill"
+    assert all(r.done() for r in others + backlog)
+    assert eng.killed_requests == 1
+    # slot/page reclamation: occupancy drained, and the table holds exactly
+    # what the executed schedule says (issued victim ops included, un-issued
+    # ones absent)
+    assert eng.pool.occupancy() == 0
+    model = replay_schedule_against_model(eng.schedule, DictModel())
+    check_shard_state(eng, model)
+    executed = {ks[0] for _, kind, ks, _, _ in eng.schedule
+                if kind == "insert"}
+    unissued = {op[1] for op in victim.ops[victim.cursor:]}
+    assert unissued.isdisjoint(executed), "killed ops still executed"
+    print("KILL-MID-PIPELINE OK cursor", victim.cursor)

@@ -1,9 +1,12 @@
 import numpy as np
 import pytest
 
+from repro.configs.base import HashMemConfig
+from repro.core import hashmap
 from repro.distributed.compression import (Int8ErrorFeedback, compress_tree)
 from repro.distributed.fault_tolerance import (
     FailureInjector, InjectedFailure, RestartPolicy, StragglerMonitor)
+from repro.serving import Request, ServingEngine
 
 
 def test_injector_fires_once():
@@ -28,6 +31,91 @@ def test_straggler_detection():
     assert mon.observe(6, 1.0)          # 10x median
     assert mon.backup_runs == 1
     assert not mon.observe(7, 0.12)
+
+
+# ---------------------------------------------------------------------------
+# Serving-engine fault injection (host shards; the mesh variants run in
+# tests/test_serving_sharded.py subprocesses)
+# ---------------------------------------------------------------------------
+
+def _eng(**kw):
+    kw.setdefault("max_slots", 4)
+    return ServingEngine(HashMemConfig(num_buckets=16, slots_per_page=8,
+                                       overflow_pages=32, max_chain=4,
+                                       backend="ref",
+                                       compact_tombstone_frac=0.0), **kw)
+
+
+def test_kill_between_pipelined_ticks_reclaims_slot():
+    """FailureInjector-driven kill between pipelined ticks: the victim's
+    in-flight ops complete, its remaining ops never run, the slot is
+    immediately reusable, and tombstone/compaction accounting still
+    reclaims the victim's dead entries."""
+    eng = _eng(pipeline_depth=2, compact_every=4,
+               record_schedule=True)
+    eng.preload(np.arange(8, dtype=np.uint32), np.arange(8, dtype=np.uint32))
+    victim = Request(ops=[("insert", 100, 1), ("delete", 100),
+                          ("insert", 101, 2), ("insert", 102, 3)])
+    eng.submit(victim)
+    eng.submit_all([Request(ops=[("read", k)] * 3) for k in range(3)])
+    backlog = Request(ops=[("read", 0)])
+
+    inj = FailureInjector(fail_at_steps=(2,))
+    killed_at = -1
+    while not eng.pool.idle() or eng._inflight:
+        try:
+            inj.check(eng.ticks)
+        except InjectedFailure:
+            assert eng._inflight, "no in-flight tick at the kill point"
+            assert eng.kill(victim)
+            killed_at = eng.ticks
+            assert eng.submit(backlog) == "admitted"   # slot reclaimed NOW
+        if eng.pool.idle():
+            eng.flush()
+        else:
+            eng.tick()
+    assert killed_at == 2 and victim.killed
+    assert victim.cursor == 2                   # insert100, delete100 issued
+    assert backlog.done()
+    # page reclamation: the victim's tombstone is compacted away on the
+    # tick clock even though the victim never completed
+    eng.submit_all([Request(ops=[("read", k)] * 4) for k in range(3)])
+    eng.run()
+    st = hashmap.stats(eng.shards[0])
+    assert st["tombstones"] == 0 and eng.compact_events >= 1
+    # table holds exactly what actually executed
+    v, f = hashmap.probe(eng.shards[0],
+                         np.asarray([100, 101, 102], np.uint32))
+    assert not bool(np.asarray(f).any()), "un-issued ops leaked into table"
+
+
+def test_forced_grow_during_pipelined_window_host():
+    """Arena exhaustion mid-pipeline (deferred PR_ERROR at drain): growth
+    repairs the refused inserts, nothing is lost or duplicated, and the
+    pipelined run equals the unpipelined one."""
+    cfg = HashMemConfig(num_buckets=2, slots_per_page=4, overflow_pages=4,
+                        max_chain=2, backend="ref", auto_grow=True)
+    keys = np.arange(64, dtype=np.uint32)
+
+    def run(depth):
+        eng = ServingEngine(cfg, max_slots=8, pipeline_depth=depth)
+        reqs = [Request(ops=[("insert", int(k), int(k) * 3)])
+                for k in keys]
+        eng.submit_all(reqs)
+        eng.run()
+        return eng, [r.results for r in reqs]
+
+    e1, r1 = run(1)
+    e2, r2 = run(2)
+    assert r2 == r1
+    assert e2.grow_events >= 1
+    for eng in (e1, e2):
+        st = hashmap.stats(eng.shards[0])
+        assert sum(hashmap.stats(hm)["live_entries"]
+                   for hm in eng.shards) == 64, "grow lost keys"
+        v, f = hashmap.probe(eng.shards[0], keys)
+        assert bool(np.asarray(f).all())
+        assert (np.asarray(v) == keys * 3).all()
 
 
 def test_bf16_compression_roundtrip_small_error():

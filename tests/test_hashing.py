@@ -37,3 +37,28 @@ def test_bucket_balance_murmur():
     b = np.asarray(hashing.hash_to_bucket(keys, 256))
     counts = np.bincount(b, minlength=256)
     assert counts.std() / counts.mean() < 0.12
+
+
+@pytest.mark.parametrize("fn", list(hashing.HASH_FNS))
+@pytest.mark.parametrize("shard_by", ["mod", "highbits"])
+def test_owner_of_np_mirrors_jnp_router(fn, shard_by):
+    """rlu.owner_of_np hand-duplicates the hash mixers in numpy (the host
+    partitioning / accounting path must not touch the device per phase);
+    pin it bit-for-bit against the jnp router for every hash fn, router,
+    and a range of shard counts — a drifted constant or shift in either
+    copy silently routes keys to the wrong shard."""
+    import dataclasses
+    from repro.configs.base import HashMemConfig
+    from repro.core import rlu
+
+    cfg = dataclasses.replace(HashMemConfig(), hash_fn=fn)
+    rng = np.random.default_rng(5)
+    keys = np.concatenate([
+        rng.integers(0, 2**32 - 2, 4096, dtype=np.int64).astype(np.uint32),
+        np.asarray([0, 1, 0xFFFFFFF0, 0xFFFFFFFD], np.uint32)])
+    for num_shards in (1, 2, 3, 4, 7, 8):
+        o_np = rlu.owner_of_np(keys, cfg, num_shards, shard_by)
+        o_j = np.asarray(rlu.owner_of(jnp.asarray(keys), cfg, num_shards,
+                                      shard_by))
+        assert (o_np == o_j).all(), (fn, shard_by, num_shards)
+        assert o_np.min() >= 0 and o_np.max() < num_shards

@@ -339,6 +339,22 @@ def test_grow_preserves_probe_on_all_backends():
         assert bool(jnp.all(v == jnp.asarray(keys + 7))), backend
 
 
+def test_zipfian_schedules_through_mesh_engine():
+    """The randomized mixed-schedule differential harness, routed through
+    the MESH-BACKED ServingEngine on 2 forced devices (subprocess pattern
+    from test_distributed.py; driver shared with test_serving_sharded.py):
+    zipfian-contended and uniform schedules, pipelining off and on, every
+    run replayed against the DictModel and bit-compared to the host-shard
+    reference — coalesced == per-request == sequential on every shard."""
+    from test_serving_sharded import run_sub
+    run_sub("""
+        from sharded_driver import sweep
+        # all-zipfian block, per-request baseline every 4th schedule
+        sweep(seed0=7000, n=24, depths=(2,), zipfian="all",
+              per_request_every=4)
+        """)
+
+
 def test_zipfian_workload_diff():
     """The serving loadgen's Zipfian skew schedule (shared generator in
     data/kv_synth.py) replayed through the differential harness path:

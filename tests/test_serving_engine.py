@@ -285,6 +285,141 @@ def test_sharded_engine_correctness(shards):
                                 "value": int(k) * 5, "found": True}
 
 
+# ---------------------------------------------------------------------------
+# Multi-tick op pipelining (metamorphic: pipelined == unpipelined, exactly)
+# ---------------------------------------------------------------------------
+
+def _strip_time(snap: dict) -> dict:
+    """Deterministic slice of a metrics snapshot (wall-clock fields vary)."""
+    return {k: snap[k] for k in
+            ("ticks", "total_ops", "ops_per_tick", "requests_completed",
+             "request_latency_ticks", "occupancy", "op_counts",
+             "probe_hit_rate")}
+
+
+def test_pipelined_results_and_metrics_equal_unpipelined():
+    """Random mixed workloads (uniform AND zipfian-contended): pipeline
+    depths 2 and 3 must reproduce the unpipelined run bit-for-bit — request
+    results, the op->tick schedule itself, and every deterministic metric."""
+    from model import make_engine_schedule
+
+    for seed in range(10):
+        streams = make_engine_schedule(seed, n_requests=16,
+                                       ops_per_request=3, keyspace=32,
+                                       zipf_theta=0.99 if seed % 2 else 0.0)
+
+        def run(depth):
+            eng = _engine(max_slots=8, pipeline_depth=depth,
+                          record_schedule=True)
+            eng.preload(np.arange(16, dtype=np.uint32),
+                        np.arange(16, dtype=np.uint32) * 3)
+            reqs = [Request(ops=list(o)) for o in streams]
+            eng.submit_all(reqs)
+            snap = eng.run()
+            return [r.results for r in reqs], snap, eng
+
+        r1, s1, e1 = run(1)
+        for depth in (2, 3):
+            rd, sd, ed = run(depth)
+            assert rd == r1, (seed, depth)
+            assert ed.schedule == e1.schedule, \
+                (seed, depth, "op->tick schedule diverged")
+            assert _strip_time(sd) == _strip_time(s1), (seed, depth)
+
+
+def test_pipelined_read_your_writes_stalls_fence():
+    """A read of a key whose insert is still in flight must stall the
+    pipeline (write-claim fence), then observe the write — read-your-writes
+    across pipelined ticks."""
+    eng = _engine(max_slots=2, pipeline_depth=2)
+    eng.preload(np.asarray([5], np.uint32), np.asarray([50], np.uint32))
+    r = Request(ops=[("update", 5, 111), ("read", 5)])
+    eng.submit(r)
+    eng.run()
+    assert r.results[1] == {"op": "read", "key": 5, "value": 111,
+                            "found": True}
+    assert eng.stall_events >= 1
+    # non-conflicting traffic does NOT stall
+    eng2 = _engine(max_slots=4, pipeline_depth=2)
+    eng2.preload(np.arange(8, dtype=np.uint32), np.arange(8, dtype=np.uint32))
+    eng2.submit_all([Request(ops=[("insert", 100 + k, k), ("read", k)])
+                     for k in range(4)])
+    eng2.run()
+    assert eng2.stall_events == 0
+
+
+def test_pipelined_tick_call_counts_unchanged():
+    """A pipelined tick still issues at most one call per phase per shard —
+    pipelining defers materialization, never splits batches."""
+    eng = _engine(max_slots=16, pipeline_depth=2)
+    eng.submit_all([Request(ops=[("insert", k, k + 1), ("read", 100 + k)])
+                    for k in range(16)])
+    eng.tick()
+    assert eng.calls_last_tick == {"probe": 0, "delete": 0, "insert": 1}
+    eng.tick()
+    assert eng.calls_last_tick == {"probe": 1, "delete": 0, "insert": 0}
+    assert eng.stats()["pipeline"]["depth"] == 2
+
+
+def test_one_shard_grow_keeps_other_shards_tombstone_accounting():
+    """A grow that rebuilds only shard 1 must not reset shard 0's tombstone
+    counter (per-shard rebuild epochs) — otherwise repeated growth starves
+    the tombstone-fraction compaction trigger on untouched shards."""
+    from repro.core import rlu
+    cfg = _cfg(num_buckets=8, slots_per_page=8, overflow_pages=8,
+               max_chain=2, auto_grow=True)
+    eng = ServingEngine(cfg, num_shards=2, max_slots=8, compact_every=10**6)
+    owners = rlu.owner_of_np(np.arange(4096, dtype=np.uint32), cfg, 2,
+                             eng.shard_by)
+    k0 = np.nonzero(owners == 0)[0][:8].astype(np.uint32)
+    k1 = np.nonzero(owners == 1)[0][:160].astype(np.uint32)
+    eng.preload(k0, k0)
+    eng.submit_all([Request(ops=[("delete", int(k))]) for k in k0[:4]])
+    eng.run()
+    assert eng._tombstones[0] == 4
+    # flood shard 1 until its arena rebuilds
+    eng.submit_all([Request(ops=[("insert", int(k), 1)]) for k in k1])
+    eng.run()
+    assert eng.grow_events >= 1
+    assert eng.shards[1].config.num_buckets > cfg.num_buckets
+    assert eng.shards[0].config.num_buckets == cfg.num_buckets
+    assert eng._tombstones[0] == 4, "untouched shard's accounting was reset"
+    assert eng._tombstones[1] == 0
+
+
+# ---------------------------------------------------------------------------
+# Mesh backend, single-device in-process slice (>= 2-device coverage lives
+# in test_serving_sharded.py subprocesses)
+# ---------------------------------------------------------------------------
+
+def test_mesh_backend_single_device_matches_host():
+    from repro.launch.mesh import make_serving_mesh
+    from model import make_engine_schedule
+    mesh = make_serving_mesh(1)
+    streams = make_engine_schedule(3, n_requests=12, keyspace=24)
+
+    def run(**kw):
+        eng = _engine(max_slots=6, **kw)
+        eng.preload(np.arange(12, dtype=np.uint32),
+                    np.arange(12, dtype=np.uint32) * 7)
+        reqs = [Request(ops=list(o)) for o in streams]
+        eng.submit_all(reqs)
+        eng.run()
+        return [r.results for r in reqs], eng
+
+    ref, _ = run()
+    got, eng = run(mesh=mesh)
+    assert got == ref
+    assert eng.stats()["mesh_backed"]
+    got2, eng2 = run(mesh=mesh, pipeline_depth=2)
+    assert got2 == ref
+    # every non-empty phase was exactly ONE rlu call
+    eng3 = _engine(max_slots=8, mesh=mesh)
+    eng3.submit_all([Request(ops=[("insert", k, k)]) for k in range(8)])
+    eng3.tick()
+    assert eng3.calls_last_tick == {"probe": 0, "delete": 0, "insert": 1}
+
+
 def test_same_tick_write_contention_is_serialized():
     """Two updates of one key submitted in the same tick must behave like
     sequential updates (write-claim deferral): no leaked duplicate copies,

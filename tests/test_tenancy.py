@@ -116,6 +116,77 @@ def test_tenant_isolation_under_deletes_and_growth():
     assert a_live > 0                            # A's entries untouched
 
 
+def test_tenant_stats_exact_attribution_multi_shard():
+    """Per-tenant op/hit accounting must be exact — attributed ONCE per
+    executed op at gather time and once per probed key at writeback — no
+    matter which shard an op routes to (ISSUE 5 audit: a per-phase-executor
+    attribution would double-count update/rmw ops, which contribute entries
+    to two phases, and scans spanning shards).  Also pins: deferred writers
+    (same-tick claims) are counted once, on the tick they execute."""
+    for shards, mesh_on in ((1, False), (3, False), (2, True)):
+        reg = TenantRegistry()
+        a = reg.register("A")
+        b = reg.register("B")
+        kw = {}
+        if mesh_on:
+            from repro.launch.mesh import make_serving_mesh
+            kw["mesh"] = make_serving_mesh(1)     # in-process: 1 device
+        eng = ServingEngine(HashMemConfig(num_buckets=32, slots_per_page=16,
+                                          overflow_pages=32, max_chain=8,
+                                          backend="ref"),
+                            max_slots=8, tenants=reg,
+                            num_shards=1 if mesh_on else shards, **kw)
+        eng.preload(np.arange(16, dtype=np.uint32),
+                    np.arange(16, dtype=np.uint32) * 2, tenant=a)
+        # A: ops spreading across shards, incl. a scan and an rmw; the two
+        # updates of key 0 land in the SAME tick, so the later slot's is
+        # DEFERRED a tick but must still be counted exactly once
+        eng.submit_all([
+            Request(ops=[("update", 0, 9), ("read", 0)], tenant=a),
+            Request(ops=[("scan", 1, 4)], tenant=a),
+            Request(ops=[("rmw", 5, 7), ("read", 5)], tenant=a),
+            Request(ops=[("update", 0, 11)], tenant=a),
+        ])
+        # B: misses only (its folded keyspace was never loaded)
+        eng.submit_all([Request(ops=[("read", k)], tenant=b)
+                        for k in range(3)])
+        eng.run()
+        st = reg.stats()
+        assert st["A"]["ops"] == {"read": 2, "update": 2, "insert": 0,
+                                  "delete": 0, "scan": 1, "rmw": 1}, \
+            (shards, mesh_on, st["A"]["ops"])
+        # hits: read0, scan 1-4 (4 hits), rmw5 pre-read, read5 = 7
+        assert st["A"]["hits"] == 7 and st["A"]["misses"] == 0, \
+            (shards, mesh_on, st["A"])
+        assert st["B"]["ops"]["read"] == 3 and st["B"]["misses"] == 3
+        assert st["A"]["completed"] == 4 and st["B"]["completed"] == 3
+        # the table agrees: exactly one live copy of key 0 (two updates
+        # serialized), value from the LAST writer
+        va, fa = _read_all(eng, a, [0])[0]
+        assert fa and va == 11, (shards, mesh_on, va)
+
+
+def test_tenant_killed_attribution():
+    reg = TenantRegistry()
+    t = reg.register("T")
+    eng = ServingEngine(HashMemConfig(num_buckets=32, slots_per_page=16,
+                                      overflow_pages=32, max_chain=8,
+                                      backend="ref"),
+                        max_slots=2, tenants=reg)
+    victim = Request(ops=[("insert", 1, 1), ("insert", 2, 2),
+                          ("insert", 3, 3)], tenant=t)
+    other = Request(ops=[("read", 1)], tenant=t)
+    eng.submit_all([victim, other])
+    eng.tick()
+    assert eng.kill(victim)
+    eng.run()
+    st = reg.stats()["T"]
+    assert st["killed"] == 1 and st["completed"] == 1
+    # only the issued op counted; un-issued ops never attributed
+    assert st["ops"]["insert"] == 1
+    assert eng.stats()["killed_requests"] == 1
+
+
 def test_tenant_stats_attribution():
     reg = TenantRegistry()
     a = reg.register("A")

@@ -1,0 +1,132 @@
+"""Bench-trajectory regression guard (make ci).
+
+BENCH_kernels.json / BENCH_serving.json accumulate one run per PR (a
+``runs`` list, benchmarks/bench_util.py).  This tool compares the NEWEST
+run against the BEST prior run, metric by metric, and fails (exit 1) on a
+>``--threshold``x regression — the container is noisy, so the default bar
+is the ISSUE-5 1.5x, loose enough to ignore jitter and tight enough to
+catch a real perf cliff landing in a PR.
+
+Metric direction is inferred from the name: ``*us_per*`` / ``*ms*`` /
+``*ns_per*`` are lower-better latencies; ``*ops_per_sec`` / ``*speedup*``
+are higher-better throughputs.  Rows are matched across runs by their
+``name`` field; run-level scalar metrics (e.g.
+``speedup_coalesced_vs_per_request``) are compared too.  Metrics missing
+from either side are skipped, so adding new bench rows never trips the
+guard.
+
+Usage:  python tools/bench_check.py [--threshold 1.5] [FILE ...]
+        (default: both BENCH files that exist in the repo root)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+LOWER_BETTER = ("us_per", "ms", "ns_per", "wall_seconds")
+HIGHER_BETTER = ("ops_per_sec", "speedup")
+# wall-clock noise-dominated fields we never guard
+SKIP = ("request_latency", "tick_ms", "wall_seconds")
+# eager / interpret-mode timings swing ~1.5x between runs on this container
+# (see CHANGES.md PR 2: "3.7-5.5 us/elem across runs on this noisy
+# container"); they get 2x the band so the guard trips on cliffs, not noise
+NOISY = ("vec_us_per_elem", "scan_us_per_elem", "us_per_probe", "grow_ms",
+         "ns_per_live_entry")
+NOISY_FACTOR = 2.0
+
+
+def _direction(key: str):
+    if any(s in key for s in SKIP):
+        return None
+    if any(s in key for s in HIGHER_BETTER):
+        return "up"
+    if any(s in key for s in LOWER_BETTER):
+        return "down"
+    return None
+
+
+def _metrics(obj: dict, prefix: str):
+    for k, v in obj.items():
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            d = _direction(k)
+            if d:
+                yield f"{prefix}{k}", d, float(v)
+
+
+def _run_metrics(run: dict) -> dict:
+    out = {}
+    for name, d, v in _metrics(run, ""):
+        out[name] = (d, v)
+    for row in run.get("rows", []):
+        rn = row.get("name", "?")
+        for name, d, v in _metrics(row, f"{rn}."):
+            out[name] = (d, v)
+    return out
+
+
+def check_file(path: str, threshold: float) -> list:
+    with open(path) as f:
+        doc = json.load(f)
+    runs = doc.get("runs", [])
+    if len(runs) < 2:
+        print(f"{path}: {len(runs)} run(s), nothing to compare")
+        return []
+    newest = _run_metrics(runs[-1])
+    prior = [_run_metrics(r) for r in runs[:-1]]
+    failures = []
+    compared = 0
+    for name, (d, v) in newest.items():
+        best = None
+        for p in prior:
+            if name in p and p[name][0] == d:
+                pv = p[name][1]
+                best = pv if best is None else (
+                    max(best, pv) if d == "up" else min(best, pv))
+        if best is None or best <= 0 or v <= 0:
+            continue
+        compared += 1
+        ratio = (best / v) if d == "up" else (v / best)
+        bar = threshold * (NOISY_FACTOR if any(s in name for s in NOISY)
+                           else 1.0)
+        if ratio > bar:
+            failures.append((name, d, best, v, ratio))
+    print(f"{path}: compared {compared} metrics across {len(runs)} runs")
+    for name, d, best, v, ratio in failures:
+        want = "higher" if d == "up" else "lower"
+        print(f"  REGRESSION {name}: best prior {best:.4g}, "
+              f"newest {v:.4g} ({ratio:.2f}x worse; {want}-is-better)")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="bench trajectory files (default: BENCH_*.json "
+                         "next to the repo root)")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when newest is this many times worse than "
+                         "the best prior run (default 1.5)")
+    args = ap.parse_args()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = args.files or [
+        p for p in (os.path.join(root, "BENCH_kernels.json"),
+                    os.path.join(root, "BENCH_serving.json"))
+        if os.path.exists(p)]
+    if not files:
+        print("no bench trajectory files found")
+        return 0
+    failures = []
+    for path in files:
+        failures += check_file(path, args.threshold)
+    if failures:
+        print(f"FAIL: {len(failures)} metric(s) regressed past "
+              f"{args.threshold}x")
+        return 1
+    print("bench check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
