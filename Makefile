@@ -2,7 +2,7 @@
 PYTHON ?= python
 
 .PHONY: test test-slow bench-kernels bench-json bench-serving \
-	bench-serving-mesh bench-smoke bench-check lint ci
+	bench-serving-mesh bench-smoke fused-smoke bench-check lint ci
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) -m pytest -x -q
@@ -20,9 +20,12 @@ bench-json:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) benchmarks/kernel_bench.py --json
 
 # serving-engine throughput trajectory: coalesced ticks vs per-request
-# baseline at 64 concurrent requests; APPENDS a run to BENCH_serving.json
+# baseline at 64 concurrent requests, plus fused-vs-unfused mesh rows
+# (launch count 3 -> 1, route_cap_* skew telemetry; the bench spawns a
+# 2-forced-device child for them so the host rows keep the real device);
+# APPENDS a run to BENCH_serving.json
 bench-serving:
-	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) benchmarks/serving_bench.py --json
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) benchmarks/serving_bench.py --json --mesh-shards 2
 
 # serving bench with mesh-backed shards on 4 forced host devices (adds
 # mesh / mesh_pipelined rows; no JSON append by default)
@@ -34,8 +37,17 @@ bench-serving-mesh:
 bench-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) benchmarks/serving_bench.py --smoke
 
-# perf-trajectory regression guard: newest BENCH_*.json run vs best prior
-# run, >1.5x fails (noisy eager metrics get a 2x band; tools/bench_check.py)
+# fast fused-vs-unfused differential smoke on 2 forced host devices: a few
+# mixed schedules bit-compared fused vs three-call vs host reference, plus
+# the adversarial worst-skew capacity check (tests/sharded_driver.py)
+fused-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+	PYTHONPATH=src:tests$${PYTHONPATH:+:$$PYTHONPATH} \
+	$(PYTHON) -c "from sharded_driver import fused_smoke; fused_smoke()"
+
+# perf-trajectory regression guard: newest BENCH_*.json run vs the best of
+# the last 5 prior runs, >1.5x fails (noisy eager metrics get a 2x band;
+# first-appearance metrics warn; tools/bench_check.py)
 bench-check:
 	$(PYTHON) tools/bench_check.py
 
@@ -44,5 +56,6 @@ bench-check:
 lint:
 	$(PYTHON) tools/lint.py
 
-# the full gate: lint + tier-1 tests + a fast bench smoke + perf guard
-ci: lint test bench-smoke bench-check
+# the full gate: lint + tier-1 tests + bench smoke + fused differential
+# smoke + perf guard
+ci: lint test bench-smoke fused-smoke bench-check

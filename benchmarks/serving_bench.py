@@ -11,12 +11,22 @@ YCSB-style loadgen over the SAME request stream in several modes:
     loop PR 3 replaced;
   * ``pipelined``   — coalesced + pipeline_depth=2 (tick N+1's phases
     issued while tick N's results are in flight; write-claim fence);
-  * ``--mesh-shards N`` adds mesh-backed rows (one rlu shard_map call per
-    phase per tick) — needs N jax devices, e.g.
-    XLA_FLAGS=--xla_force_host_platform_device_count=N.
+  * ``--mesh-shards N`` adds mesh-backed rows — ``mesh`` /
+    ``mesh_pipelined`` run the three-call per-phase path
+    (``fused_tick=False``, one shard_map per phase per tick, the pre-fused
+    baseline) and ``mesh_fused`` / ``mesh_fused_pipelined`` run the fused
+    whole-tick megakernel (ONE shard_map for probe+delete+insert, the
+    engine default) with two-pass skew-aware routing; fused rows carry
+    ``route_cap_*`` telemetry showing the routed ICI capacity tracking the
+    measured key skew instead of the Q_local worst case.  When the process
+    has fewer than N jax devices, the mesh rows run in a CHILD process
+    with --xla_force_host_platform_device_count=N — forcing host devices
+    in THIS process would split the CPU for the host-shard rows too and
+    poison their trajectory against single-device prior runs.
 
 The PR-3 acceptance bar: at 64 concurrent requests the coalesced engine
-sustains >= 5x the ops/sec of the per-request baseline.
+sustains >= 5x the ops/sec of the per-request baseline.  The ISSUE-6
+launch-count bar: fused mesh rows show calls_per_tick 1 vs 3.
 
 ``--json`` APPENDS this run to ``BENCH_serving.json`` (a ``runs`` list), so
 the file keeps a per-PR perf trajectory like BENCH_kernels.json
@@ -25,6 +35,10 @@ the file keeps a per-PR perf trajectory like BENCH_kernels.json
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 import time
 
 from bench_util import append_run
@@ -32,21 +46,33 @@ from bench_util import append_run
 from repro.serving import build_ycsb_engine
 
 
+def _ratio(num: float, den: float) -> float:
+    """num/den with a finite 0.0 fallback — ``float("inf")`` here used to
+    reach json.dumps, which emits ``Infinity`` (not valid JSON) and
+    corrupts the BENCH trajectory file."""
+    return num / den if den > 0 else 0.0
+
+
 def run_mode(*, coalesce, workloads, slots, shards, record_count,
              ops_per_request, requests, seed, pipeline=1, mesh=None,
-             tag="") -> dict:
+             fused=None, tag="") -> dict:
     kw = dict(slots=slots, shards=shards, record_count=record_count,
               ops_per_request=ops_per_request, coalesce=coalesce,
-              pipeline_depth=pipeline, mesh=mesh)
+              pipeline_depth=pipeline, mesh=mesh, fused_tick=fused)
     eng, gens = build_ycsb_engine(workloads, seed=seed, **kw)
     per = requests // len(gens)
     reqs = [r for g in gens for r in g.requests(per)]
     # warmup: an identical engine (same config, slots => same padded batch
     # shapes) compiles every op-kind trace outside the timed window — the
-    # module-level jit cache is shared, so the measured run is steady-state
-    warm, wgens = build_ycsb_engine(workloads, seed=seed + 997, **kw)
-    warm.submit_all([r for g in wgens for r in g.requests(2 * slots
-                                                          // len(wgens))])
+    # module-level jit cache is shared, so the measured run is steady-state.
+    # Fused mesh rows need the warmup to REPLAY the same stream: two-pass
+    # routing bakes the measured capacity into the trace, so only the exact
+    # per-tick cap tuples the timed run will see are worth compiling.
+    fused_mesh = mesh is not None and coalesce and fused is not False
+    wseed = seed if fused_mesh else seed + 997
+    warm, wgens = build_ycsb_engine(workloads, seed=wseed, **kw)
+    wn = per if fused_mesh else 2 * slots // len(wgens)
+    warm.submit_all([r for g in wgens for r in g.requests(wn)])
     warm.run()
 
     t0 = time.perf_counter()
@@ -54,6 +80,18 @@ def run_mode(*, coalesce, workloads, slots, shards, record_count,
     snap = eng.run()
     wall = time.perf_counter() - t0
     name = tag or ("coalesced" if coalesce else "per_request")
+    # two-pass routing telemetry (fused mesh rows): how far the measured
+    # per-(src,dst) capacity sits below the Q_local worst-case padding
+    route = {}
+    if eng.route_cap_log:
+        caps = [c for rec in eng.route_cap_log for c in rec["cap"]]
+        qls = [q for rec in eng.route_cap_log for q in rec["q_local"]]
+        route = {
+            "route_cap_mean": sum(caps) / len(caps),
+            "route_cap_max": max(caps),
+            "route_cap_q_local_max": max(qls),
+            "route_cap_fill": _ratio(sum(caps), sum(qls)),
+        }
     return {
         "name": f"serving_{''.join(workloads)}_{slots}slots_{name}",
         "mode": name,
@@ -77,7 +115,56 @@ def run_mode(*, coalesce, workloads, slots, shards, record_count,
         "probe_hit_rate": snap["probe_hit_rate"],
         "grow_events": eng.grow_events,
         "compact_events": eng.compact_events,
+        **route,
     }
+
+
+def _mesh_rows(num_shards: int, slots: int, kw: dict) -> list:
+    """mesh/mesh_pipelined (per-phase baseline) + mesh_fused rows, plus the
+    fused-vs-unfused comparison row.  Needs ``num_shards`` jax devices."""
+    from repro.launch.mesh import make_serving_mesh
+    mesh = make_serving_mesh(num_shards)
+    # per-phase baseline (fused=False: 3 shard_map launches per tick)
+    mu = run_mode(coalesce=True, mesh=mesh, fused=False, tag="mesh", **kw)
+    mp = run_mode(coalesce=True, mesh=mesh, fused=False, pipeline=2,
+                  tag="mesh_pipelined", **kw)
+    # fused whole-tick megakernel (engine default: ONE launch per tick)
+    mf = run_mode(coalesce=True, mesh=mesh, tag="mesh_fused", **kw)
+    mfp = run_mode(coalesce=True, mesh=mesh, pipeline=2,
+                   tag="mesh_fused_pipelined", **kw)
+    cmp_row = {"name": f"serving_fused_tick_{slots}slots",
+               "launches_per_tick_unfused": mu["calls_per_tick"],
+               "launches_per_tick_fused": mf["calls_per_tick"],
+               "fused_vs_unfused_throughput_ratio":
+                   _ratio(mf["ops_per_sec"], mu["ops_per_sec"]),
+               "route_cap_fill": mf.get("route_cap_fill", 1.0)}
+    return [mu, mp, mf, mfp, cmp_row]
+
+
+def _mesh_block(args, kw: dict) -> list:
+    """Run the mesh rows inline when this process already has enough jax
+    devices; otherwise re-exec this script in a CHILD process with
+    --xla_force_host_platform_device_count (forcing host devices in the
+    parent would split the CPU under the host-shard rows too, poisoning
+    their trajectory against single-device prior runs)."""
+    import jax
+    if jax.device_count() >= args.mesh_shards:
+        return _mesh_rows(args.mesh_shards, args.slots, kw)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count="
+                        f"{args.mesh_shards}").strip()
+    cmd = [sys.executable, os.path.abspath(__file__), "--mesh-rows-json",
+           "--mesh-shards", str(args.mesh_shards),
+           "--requests", str(args.requests), "--slots", str(args.slots),
+           "--shards", str(args.shards),
+           "--record-count", str(args.record_count),
+           "--ops-per-request", str(args.ops_per_request),
+           "--workloads", args.workloads, "--seed", str(args.seed)]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"mesh-row child failed:\n{r.stdout}\n{r.stderr}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
 
 
 def main():
@@ -99,6 +186,8 @@ def main():
                          "jax devices; see module docstring)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny run for CI (make ci)")
+    ap.add_argument("--mesh-rows-json", action="store_true",
+                    help=argparse.SUPPRESS)  # child mode: emit mesh rows
     args = ap.parse_args()
     if args.out is not None:
         args.json = True
@@ -111,26 +200,23 @@ def main():
               record_count=args.record_count,
               ops_per_request=args.ops_per_request, requests=args.requests,
               seed=args.seed)
+    if args.mesh_rows_json:
+        print(json.dumps(_mesh_rows(args.mesh_shards, args.slots, kw)))
+        return
     co = run_mode(coalesce=True, **kw)
     pr = run_mode(coalesce=False, **kw)
     pi = run_mode(coalesce=True, pipeline=2, tag="pipelined", **kw)
     rows = [co, pr, pi]
     if args.mesh_shards:
-        from repro.launch.mesh import make_serving_mesh
-        mesh = make_serving_mesh(args.mesh_shards)
-        rows.append(run_mode(coalesce=True, mesh=mesh, tag="mesh", **kw))
-        rows.append(run_mode(coalesce=True, mesh=mesh, pipeline=2,
-                             tag="mesh_pipelined", **kw))
-    speedup = co["ops_per_sec"] / pr["ops_per_sec"] if pr["ops_per_sec"] \
-        else float("inf")
+        rows += _mesh_block(args, kw)
+    speedup = _ratio(co["ops_per_sec"], pr["ops_per_sec"])
     rows.append({"name": f"serving_speedup_{args.slots}slots",
                  "coalesced_ops_per_sec": co["ops_per_sec"],
                  "per_request_ops_per_sec": pr["ops_per_sec"],
                  "pipelined_ops_per_sec": pi["ops_per_sec"],
                  "speedup": speedup,
                  "pipelined_vs_coalesced":
-                     pi["ops_per_sec"] / co["ops_per_sec"]
-                     if co["ops_per_sec"] else float("inf"),
+                     _ratio(pi["ops_per_sec"], co["ops_per_sec"]),
                  "meets_5x_bar": speedup >= 5.0})
     for r in rows:
         print(r)

@@ -50,3 +50,36 @@ def count_scatters(fn, *args) -> int:
     """Number of scatter primitives in fn's jaxpr (recursing into sub-jaxprs
     — the structural 'pool scatters per op' the ROADMAP tracks)."""
     return count_primitive(fn, "scatter", *args)
+
+
+def primitive_shapes(fn, prefix: str, *args) -> list:
+    """Output shapes (tuples) of every primitive whose name starts with
+    ``prefix`` in fn's jaxpr, recursing into sub-jaxprs, in program order.
+
+    Pins DATA-dependent compile-time structure: the two-pass routing tests
+    trace the fused tick with differently-skewed batches of the SAME shape
+    and assert the ``all_to_all`` buffer shapes changed — i.e. the routing
+    capacity follows the measured skew, not the worst-case Q_local.
+    """
+    import jax
+
+    shapes: list = []
+
+    def visit(v):
+        if hasattr(v, "jaxpr"):        # ClosedJaxpr
+            walk(v.jaxpr)
+        elif hasattr(v, "eqns"):       # Jaxpr
+            walk(v)
+        elif isinstance(v, (tuple, list)):   # e.g. cond/switch branches
+            for x in v:
+                visit(x)
+
+    def walk(j):
+        for eq in j.eqns:
+            if eq.primitive.name.startswith(prefix):
+                shapes.extend(tuple(o.aval.shape) for o in eq.outvars)
+            for v in eq.params.values():
+                visit(v)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return shapes

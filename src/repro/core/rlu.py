@@ -210,35 +210,68 @@ class _Route:
     """Owner-routing bookkeeping for one shard's local queries: the send
     buffer layout (stable argsort keeps intra-owner batch order, which is
     what preserves duplicate-key FIFO semantics end to end) plus the gather
-    indices that un-route results."""
+    indices that un-route results.
 
-    def __init__(self, q_local, owner, num_shards: int, c: int, pad):
+    ``drop_invalid=True`` (the fused-tick path) excludes entries equal to
+    ``pad`` from routing entirely: they get an out-of-range owner, are
+    dropped from the send scatter, and never consume per-(src,dst)
+    capacity — which is what lets the two-pass scheme set ``c`` to the
+    measured max VALID count instead of Q_local.  Their gathered-back
+    results are masked to 0/False."""
+
+    def __init__(self, q_local, owner, num_shards: int, c: int, pad,
+                 drop_invalid: bool = False):
         qn = q_local.shape[0]
         self.c = c
+        self.num_shards = num_shards
+        self.drop_invalid = drop_invalid
+        q_local = q_local.astype(U32)
+        if drop_invalid:
+            self.valid = q_local != U32(pad)
+            owner = jnp.where(self.valid, owner, I32(num_shards))
         self.order = jnp.argsort(owner)          # stable
         self.o_sorted = owner[self.order]
-        q_sorted = q_local[self.order].astype(U32)
+        q_sorted = q_local[self.order]
         # position within each owner group
         start = jnp.searchsorted(self.o_sorted, self.o_sorted, side="left")
         self.pos = jnp.arange(qn, dtype=I32) - start.astype(I32)
         self.overflow = self.pos >= c
         send = jnp.full((num_shards, c), pad, dtype=U32)
-        self.send = send.at[self.o_sorted, jnp.minimum(self.pos, c - 1)].set(
-            jnp.where(self.overflow, pad, q_sorted))
+        if drop_invalid:
+            # out-of-range rows (invalid) and pos >= c (overflow) both drop
+            self.send = send.at[self.o_sorted, self.pos].set(
+                q_sorted, mode="drop")
+        else:
+            self.send = send.at[self.o_sorted,
+                                jnp.minimum(self.pos, c - 1)].set(
+                jnp.where(self.overflow, pad, q_sorted))
         self.inv = jnp.argsort(self.order)
+
+    def counts(self):
+        """(num_shards,) int32: valid local queries per destination shard —
+        the payload of the two-pass count exchange (drop_invalid only)."""
+        assert self.drop_invalid
+        return jnp.bincount(self.o_sorted, length=self.num_shards + 1)[
+            :self.num_shards].astype(I32)
 
     def send_aux(self, x_local, num_shards: int, fill):
         """Route a second per-query array (e.g. insert values) the same way."""
         xs = x_local[self.order].astype(U32)
         send = jnp.full((num_shards, self.c), fill, dtype=U32)
+        if self.drop_invalid:
+            return send.at[self.o_sorted, self.pos].set(xs, mode="drop")
         return send.at[self.o_sorted, jnp.minimum(self.pos, self.c - 1)].set(
             jnp.where(self.overflow, fill, xs))
 
     def gather_back(self, back, mask_overflow: bool = False):
         """(num_shards, c) routed-back results -> original query order."""
-        out = back[self.o_sorted, jnp.minimum(self.pos, self.c - 1)]
+        out = back[jnp.minimum(self.o_sorted, self.num_shards - 1),
+                   jnp.minimum(self.pos, self.c - 1)]
         if mask_overflow:
             out = out & ~self.overflow
+        if self.drop_invalid:
+            out = jnp.where(self.valid[self.order], out,
+                            jnp.zeros((), out.dtype))
         return out[self.inv]
 
 
@@ -249,18 +282,18 @@ _sharded_call_cache: dict = {}
 
 
 def _sharded_call(kind: str, mesh, cfg: HashMemConfig, axis: str,
-                  shard_by: str, cap: Optional[int]):
+                  shard_by: str, cap):
     key = (kind, mesh, cfg, axis, shard_by, cap)
     fn = _sharded_call_cache.get(key)
     if fn is None:
         num_shards = mesh.shape[axis]
         builder = {"probe": _probe_shard_fn, "delete": _delete_shard_fn,
-                   "insert": _insert_shard_fn}[kind]
-        shard_fn, n_in = builder(cfg, num_shards, axis, shard_by, cap)
+                   "insert": _insert_shard_fn, "tick": _tick_shard_fn}[kind]
+        shard_fn, n_in, n_out = builder(cfg, num_shards, axis, shard_by, cap)
         fn = jax.jit(shard_map(
             shard_fn, mesh=mesh,
             in_specs=(P(axis),) * n_in,
-            out_specs=(P(axis), P(axis)),
+            out_specs=(P(axis),) * n_out,
             check_vma=False,
         ))
         _sharded_call_cache[key] = fn
@@ -283,7 +316,7 @@ def _probe_shard_fn(cfg, num_shards, axis, shard_by, cap):
                                     tiled=False)
         return rt.gather_back(back_v), rt.gather_back(back_f,
                                                       mask_overflow=True)
-    return shard_fn, 2
+    return shard_fn, 2, 2
 
 
 def probe_sharded(mesh, hm_stacked, queries, cfg: HashMemConfig,
@@ -313,7 +346,7 @@ def _delete_shard_fn(cfg, num_shards, axis, shard_by, cap):
                                     tiled=False)
         hm_out = jax.tree.map(lambda x: x[None], hm2)
         return hm_out, rt.gather_back(back_f, mask_overflow=True)
-    return shard_fn, 2
+    return shard_fn, 2, 2
 
 
 def delete_sharded(mesh, hm_stacked, keys, cfg: HashMemConfig,
@@ -348,7 +381,7 @@ def _insert_shard_fn(cfg, num_shards, axis, shard_by, cap):
                                      tiled=False)
         hm_out = jax.tree.map(lambda x: x[None], hm2)
         return hm_out, rt.gather_back(back_ok, mask_overflow=True)
-    return shard_fn, 3
+    return shard_fn, 3, 2
 
 
 def insert_mesh(mesh, hm_stacked, keys, vals, cfg: HashMemConfig,
@@ -367,6 +400,127 @@ def insert_mesh(mesh, hm_stacked, keys, vals, cfg: HashMemConfig,
     """
     fn = _sharded_call("insert", mesh, cfg, axis, shard_by, cap)
     return fn(hm_stacked, keys, vals)
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-tick megakernel: probe -> delete -> insert in ONE shard_map
+# ---------------------------------------------------------------------------
+
+def routing_cap(keys, cfg: HashMemConfig, num_shards: int,
+                shard_by: str = "mod", *, quantum: int = 8) -> int:
+    """Pass 1 of the two-pass count+route scheme, host mirror: the max
+    per-(src,dst) VALID-key count for a (Q,) batch laid out contiguously
+    across ``num_shards`` devices (entries equal to ROUTE_PAD don't count —
+    the fused route drops them).
+
+    The result is rounded up to a multiple of ``quantum`` (bounds the set
+    of compiled capacities to Q_local/quantum per batch shape) and clamped
+    to [min(quantum, Q_local), Q_local].  Rounding is UP, so the capacity
+    can never truncate; on a skewed tick it tracks the measured max instead
+    of the worst-case Q_local the unfused path pads to.
+    """
+    k = np.asarray(keys, np.uint32)
+    q = k.shape[0]
+    assert q % num_shards == 0, (q, num_shards)
+    q_local = q // num_shards
+    valid = k != ROUTE_PAD
+    mx = 0
+    if valid.any():
+        owner = owner_of_np(k, cfg, num_shards, shard_by)
+        src = np.arange(q) // q_local
+        pair = (src * num_shards + owner)[valid]
+        mx = int(np.bincount(pair, minlength=num_shards * num_shards).max())
+    cap = max(quantum, -(-mx // quantum) * quantum)
+    return min(cap, q_local)
+
+
+def _tick_shard_fn(cfg, num_shards, axis, shard_by, caps):
+    cap_p, cap_d, cap_i = caps
+
+    def shard_fn(hm_stacked_local, pq, dq, ik, iv):
+        hm1 = jax.tree.map(lambda x: x[0], hm_stacked_local)
+        pad = jnp.uint32(ROUTE_PAD)
+        cp = cap_p or pq.shape[0]
+        cd = cap_d or dq.shape[0]
+        ci = cap_i or ik.shape[0]
+        po, _ = owner_and_local_bucket(pq, cfg, num_shards, shard_by)
+        do = owner_of(dq, cfg, num_shards, shard_by)
+        io, _ = owner_and_local_bucket(ik, cfg, num_shards, shard_by)
+        rt_p = _Route(pq, po, num_shards, cp, pad, drop_invalid=True)
+        rt_d = _Route(dq, do, num_shards, cd, pad, drop_invalid=True)
+        rt_i = _Route(ik, io, num_shards, ci, pad, drop_invalid=True)
+        # pass 1 on-device: ONE small all_to_all of per-(src,dst) valid
+        # counts for all three phases — row s of the result is what shard s
+        # sent me, so counts_in[s, ph] bounds the dense prefix of recv row s
+        counts = jnp.stack([rt_p.counts(), rt_d.counts(), rt_i.counts()],
+                           axis=-1)                       # (D, 3)
+        counts_in = jax.lax.all_to_all(counts, axis, 0, 0, tiled=False)
+        # pass 2: routed payloads at the measured capacities
+        # -- probe (pre-tick table) ----------------------------------------
+        recv_p = jax.lax.all_to_all(rt_p.send, axis, 0, 0, tiled=False)
+        rv, rf = _local_probe(hm1, recv_p.reshape(-1), cfg, num_shards,
+                              shard_by)
+        back_v = jax.lax.all_to_all(rv.reshape(num_shards, cp), axis, 0, 0,
+                                    tiled=False)
+        back_f = jax.lax.all_to_all(rf.reshape(num_shards, cp), axis, 0, 0,
+                                    tiled=False)
+        # -- delete ---------------------------------------------------------
+        recv_d = jax.lax.all_to_all(rt_d.send, axis, 0, 0, tiled=False)
+        flat_d = recv_d.reshape(-1)
+        _, lb_d = owner_and_local_bucket(flat_d, cfg, num_shards, shard_by)
+        hm2, dfound = hashmap.delete_with_buckets(hm1, flat_d, lb_d)
+        back_df = jax.lax.all_to_all(dfound.reshape(num_shards, cd), axis,
+                                     0, 0, tiled=False)
+        # -- insert (post-delete table) -------------------------------------
+        recv_k = jax.lax.all_to_all(rt_i.send, axis, 0, 0, tiled=False)
+        recv_v = jax.lax.all_to_all(
+            rt_i.send_aux(iv, num_shards, jnp.uint32(0)), axis, 0, 0,
+            tiled=False)
+        flat_k = recv_k.reshape(-1)
+        # validity from the count exchange: slot j of recv row s is a real
+        # key iff j < counts_in[s, 2] (the routed prefix is dense)
+        valid = (jnp.arange(ci, dtype=I32)[None, :]
+                 < counts_in[:, 2:3]).reshape(-1)
+        _, lb_i = owner_and_local_bucket(flat_k, cfg, num_shards, shard_by)
+        hm3, iok = hashmap.insert_with_buckets(hm2, flat_k,
+                                               recv_v.reshape(-1), lb_i,
+                                               valid=valid)
+        back_ok = jax.lax.all_to_all(iok.reshape(num_shards, ci), axis, 0, 0,
+                                     tiled=False)
+        hm_out = jax.tree.map(lambda x: x[None], hm3)
+        return (hm_out,
+                rt_p.gather_back(back_v),
+                rt_p.gather_back(back_f, mask_overflow=True),
+                rt_d.gather_back(back_df, mask_overflow=True),
+                rt_i.gather_back(back_ok, mask_overflow=True))
+    return shard_fn, 5, 5
+
+
+def tick_mesh(mesh, hm_stacked, probe_q, del_q, ins_k, ins_v,
+              cfg: HashMemConfig, axis: str = "model",
+              caps=None, shard_by: str = "mod"):
+    """A whole coalesced serving tick in ONE shard_map call: the sharded
+    PageStore pytree is carried functionally through probe -> delete ->
+    insert on-device, so a tick costs one host<->mesh launch instead of
+    three (the paper's one-activation-per-chain-step economics applied to
+    the launch path).
+
+    ``caps``: per-phase (probe, delete, insert) per-(src,dst) routing
+    capacities from the two-pass scheme — compute each with
+    ``routing_cap`` on the same batches; ``None`` (or a 0 entry) falls
+    back to the worst-case Q_local padding.  Entries equal to ROUTE_PAD
+    are padding in every phase: dropped from routing (they consume no
+    capacity), never stored, results 0/False.
+
+    Returns (hm_stacked', probe_vals, probe_found, del_found, ins_ok) with
+    phase semantics identical to ``probe_sharded`` (against the pre-tick
+    table) -> ``delete_sharded`` -> ``insert_mesh`` (against the
+    post-delete table) issued back to back.
+    """
+    caps = tuple(caps) if caps is not None else (None, None, None)
+    assert len(caps) == 3, caps
+    fn = _sharded_call("tick", mesh, cfg, axis, shard_by, caps)
+    return fn(hm_stacked, probe_q, del_q, ins_k, ins_v)
 
 
 def probe_replicated(mesh, hm, queries, cfg: HashMemConfig, axis: str = "data"):

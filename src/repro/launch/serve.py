@@ -131,14 +131,16 @@ def serve(cfg, mesh, *, batch=4, horizon=256, page_tokens=32, requests=8,
 def serve_kv(*, workloads="A", tenants=None, requests=64, slots=16,
              shards=1, record_count=1024, ops_per_request=4,
              max_pending=0, tenant_slots=0, seed=0, backend="ref",
-             mesh_shards=0, pipeline=1, verbose=True):
+             mesh_shards=0, pipeline=1, fused_tick=None, verbose=True):
     """Thin driver over the multi-tenant KV serving engine: one tenant per
     workload letter (comma-separated), YCSB load phase, then a drained
     continuous-batching run.  ``mesh_shards`` > 0 routes the table through
     the RLU mesh path (one shard per device on a 1-D 'model' mesh — needs
     that many jax devices, e.g. via
     XLA_FLAGS=--xla_force_host_platform_device_count=N); ``pipeline`` > 1
-    enables multi-tick op pipelining.  Returns (engine, metrics snapshot)."""
+    enables multi-tick op pipelining; ``fused_tick=False`` falls back from
+    the fused whole-tick megakernel (the mesh default: ONE shard_map per
+    tick) to one shard_map call per phase.  Returns (engine, snapshot)."""
     from repro.launch.mesh import make_serving_mesh
     from repro.serving import build_ycsb_engine
 
@@ -150,7 +152,7 @@ def serve_kv(*, workloads="A", tenants=None, requests=64, slots=16,
         shards=shards, record_count=record_count,
         ops_per_request=ops_per_request, backend=backend, seed=seed,
         max_pending=max_pending, tenant_slots=tenant_slots, mesh=mesh,
-        pipeline_depth=pipeline)
+        pipeline_depth=pipeline, fused_tick=fused_tick)
     per = requests // n_tenants
     reqs = [r for g in gens for r in g.requests(per)]
     eng.submit_all(reqs)
@@ -194,6 +196,10 @@ def main():
     ap.add_argument("--pipeline", type=int, default=1,
                     help="(kv mode) multi-tick op pipelining depth "
                          "(1 = off)")
+    ap.add_argument("--no-fused-tick", action="store_true",
+                    help="(kv mode) use one shard_map call per phase "
+                         "instead of the fused whole-tick megakernel "
+                         "(mesh default)")
     args = ap.parse_args()
 
     if args.mode == "kv":
@@ -202,7 +208,8 @@ def main():
                  record_count=args.record_count,
                  ops_per_request=args.ops_per_request,
                  backend=args.backend, mesh_shards=args.mesh_shards,
-                 pipeline=args.pipeline)
+                 pipeline=args.pipeline,
+                 fused_tick=False if args.no_fused_tick else None)
         return
 
     if args.arch is None:

@@ -136,13 +136,16 @@ def preload_engine(engine, gens: list) -> None:
 def build_ycsb_engine(workloads, *, slots=16, shards=1, record_count=1024,
                       ops_per_request=4, coalesce=True, backend="ref",
                       seed=0, max_pending=0, tenant_slots=0, metrics=None,
-                      cfg=None, mesh=None, pipeline_depth=1):
+                      cfg=None, mesh=None, pipeline_depth=1,
+                      fused_tick=None):
     """One preloaded engine + one (tenant, LoadGen) per YCSB workload letter
     — the single assembly path shared by the serve.py kv CLI and
     benchmarks/serving_bench.py, so both exercise identically-sized tables.
     ``mesh``: route the shards through the RLU mesh path (one stacked table,
     one shard per device on the 'model' axis; ``shards`` is ignored).
     ``pipeline_depth``: multi-tick op pipelining (engine.py).
+    ``fused_tick``: None = engine default (fused whole-tick megakernel on
+    mesh+coalesce), False = per-phase shard_map calls.
     Returns (engine, [LoadGen, ...])."""
     from repro.configs.base import HashMemConfig
     from repro.serving.engine import ServingEngine
@@ -162,6 +165,6 @@ def build_ycsb_engine(workloads, *, slots=16, shards=1, record_count=1024,
     eng = ServingEngine(cfg, num_shards=shards, max_slots=slots,
                         max_pending=max_pending, tenants=reg,
                         metrics=metrics, coalesce=coalesce, mesh=mesh,
-                        pipeline_depth=pipeline_depth)
+                        pipeline_depth=pipeline_depth, fused_tick=fused_tick)
     preload_engine(eng, gens)
     return eng, gens

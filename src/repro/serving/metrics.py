@@ -10,16 +10,30 @@ host sync.
 from __future__ import annotations
 
 import json
+import math
 import time
 
 import numpy as np
 
 
+def finite(x, default: float = 0.0) -> float:
+    """float(x), with NaN/inf coerced to ``default`` — every scalar that can
+    land in a BENCH_*.json row goes through here, so a drained-early engine
+    (zero completed requests, zero ticks) can never leak NaN or Infinity
+    into the trajectory files (Infinity isn't even valid JSON)."""
+    x = float(x)
+    return x if math.isfinite(x) else default
+
+
 def percentile(samples, q: float) -> float:
-    """q in [0, 100]; 0.0 for an empty sample set."""
+    """q in [0, 100].  Total over the degenerate sample sets a serving run
+    can produce: an EMPTY set (engine drained before any request completed)
+    returns 0.0 instead of raising like ``np.percentile``, a single sample
+    returns that sample for every q, and a non-finite result (NaN samples)
+    is coerced to 0.0."""
     if not len(samples):
         return 0.0
-    return float(np.percentile(np.asarray(samples, np.float64), q))
+    return finite(np.percentile(np.asarray(samples, np.float64), q))
 
 
 class MetricsCollector:
@@ -99,16 +113,16 @@ class MetricsCollector:
         total_ops = int(sum(self.tick_ops))
         ticks = len(self.tick_ops)
         return {
-            "wall_seconds": wall,
+            "wall_seconds": finite(wall),
             "ticks": ticks,
             "total_ops": total_ops,
-            "ops_per_sec": total_ops / wall if wall > 0 else 0.0,
-            "ops_per_tick": total_ops / ticks if ticks else 0.0,
+            "ops_per_sec": finite(total_ops / wall) if wall > 0 else 0.0,
+            "ops_per_tick": finite(total_ops / ticks) if ticks else 0.0,
             "requests_completed": len(self.req_ticks),
             "request_latency_ticks": {
                 "p50": percentile(self.req_ticks, 50),
                 "p99": percentile(self.req_ticks, 99),
-                "max": float(max(self.req_ticks, default=0)),
+                "max": finite(max(self.req_ticks, default=0)),
             },
             "request_latency_ms": {
                 "p50": percentile(self.req_secs, 50) * 1e3,
@@ -119,14 +133,18 @@ class MetricsCollector:
                 "p99": percentile(self.tick_secs, 99) * 1e3,
             },
             "occupancy": {
-                "mean": float(np.mean(self.occupancy)) if self.occupancy
+                "mean": finite(np.mean(self.occupancy)) if self.occupancy
                 else 0.0,
                 "max": int(max(self.occupancy, default=0)),
             },
             "op_counts": dict(self.ops),
-            "probe_hit_rate": self.hits / self.probes if self.probes else 0.0,
+            "probe_hit_rate": finite(self.hits / self.probes)
+            if self.probes else 0.0,
             "chain_telemetry": self.chain_samples[-8:],
         }
 
     def to_json(self, **extra) -> str:
-        return json.dumps({**self.snapshot(), **extra}, indent=2)
+        # allow_nan=False turns any non-finite scalar that slipped past the
+        # finite() coercions into a hard error instead of invalid JSON
+        return json.dumps({**self.snapshot(), **extra}, indent=2,
+                          allow_nan=False)

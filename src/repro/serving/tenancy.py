@@ -9,10 +9,16 @@ property of the key encoding, not of per-tenant replicas, so one tenant's
 deletes, tombstones, and auto-grow rebuilds can never alias another tenant's
 entries (rebuilds re-bucket by the folded key; see tests/test_tenancy.py).
 
-Sentinel safety: HashMem reserves 0xFFFFFFFF (EMPTY) and 0xFFFFFFFE
-(TOMBSTONE), and the workload generators keep raw keys below 0xFFFFFFF0.
-The top tenant id is therefore unusable (its folded range reaches the
-sentinels); ``max_tenants`` excludes it.
+Sentinel safety: the folded key domain must stay strictly below 0xFFFFFFF0
+(ROUTE_PAD) — HashMem reserves 0xFFFFFFFF (EMPTY) and 0xFFFFFFFE
+(TOMBSTONE), and the RLU/engine use 0xFFFFFFF0..0xFFFFFFFD as routing/batch
+padding: a key in that range would be silently treated as padding (never
+stored, probes always miss).  The workload generators keep raw keys below
+0xFFFFFFF0, and the top (all-ones) tenant id is unregistrable because its
+folded range reaches up into the reserved region; ``max_tenants`` excludes
+it.  ``fold`` enforces the reserved floor with a real exception (not an
+assert), so a mis-sized custom TenantSpace can't smuggle a reserved key
+into the table even under ``python -O``.
 """
 from __future__ import annotations
 
@@ -35,14 +41,24 @@ class TenantSpace:
         self.key_space = 1 << self.key_bits
 
     def fold(self, tenant_id: int, keys):
-        """(tenant_id, keys) -> folded uint32 keys (vectorized)."""
-        assert 0 <= tenant_id < self.max_tenants, \
-            f"tenant id {tenant_id} out of range [0, {self.max_tenants})"
+        """(tenant_id, keys) -> folded uint32 keys (vectorized).  Raises
+        ValueError when a tenant id or key is out of range, or when a
+        folded key would land in the reserved pad/sentinel range
+        [0xFFFFFFF0, 0xFFFFFFFF] (see module docstring)."""
+        if not 0 <= tenant_id < self.max_tenants:
+            raise ValueError(
+                f"tenant id {tenant_id} out of range [0, {self.max_tenants})")
         keys = np.asarray(keys, np.uint64)
-        assert (keys < self.key_space).all(), \
-            f"tenant keys must fit {self.key_bits} bits"
-        return ((np.uint64(tenant_id) << np.uint64(self.key_bits)) | keys) \
+        if keys.size and not (keys < self.key_space).all():
+            raise ValueError(f"tenant keys must fit {self.key_bits} bits")
+        folded = ((np.uint64(tenant_id) << np.uint64(self.key_bits)) | keys) \
             .astype(np.uint32)
+        if folded.size and int(folded.max()) >= _RAW_SENTINEL_FLOOR:
+            raise ValueError(
+                f"folded key {int(folded.max()):#x} collides with the "
+                f"reserved pad/sentinel range "
+                f"[{_RAW_SENTINEL_FLOOR:#x}, 0xffffffff]")
+        return folded
 
     def unfold(self, folded):
         """Folded uint32 keys -> (tenant_ids, raw keys)."""

@@ -37,10 +37,12 @@ def _cfg(auto_grow: bool = True) -> HashMemConfig:
 
 
 def run_streams(streams, *, cfg, mesh=None, num_shards=2, coalesce=True,
-                pipeline_depth=1, max_slots=8, preload=None):
+                pipeline_depth=1, max_slots=8, preload=None,
+                fused_tick=None):
     eng = ServingEngine(cfg, mesh=mesh, num_shards=num_shards,
                         max_slots=max_slots, coalesce=coalesce,
-                        pipeline_depth=pipeline_depth, record_schedule=True)
+                        pipeline_depth=pipeline_depth, record_schedule=True,
+                        fused_tick=fused_tick)
     if preload is not None:
         eng.preload(*preload)
     reqs = [Request(ops=list(ops)) for ops in streams]
@@ -80,7 +82,11 @@ def one_schedule(seed: int, mesh, depths=(2,), per_request: bool = False,
     model = replay_schedule_against_model(host.schedule, _seeded_model(pk, pv))
     check_shard_state(host, model)
 
-    runs = {"mesh_d1": dict(mesh=mesh, pipeline_depth=1)}
+    # mesh runs default to the FUSED whole-tick megakernel; "mesh_unfused"
+    # keeps the three-call reference path, so every schedule bit-compares
+    # fused vs unfused (both against the host reference)
+    runs = {"mesh_d1": dict(mesh=mesh, pipeline_depth=1),
+            "mesh_unfused": dict(mesh=mesh, fused_tick=False)}
     for d in depths:
         runs[f"mesh_d{d}"] = dict(mesh=mesh, pipeline_depth=d)
     if per_request:
@@ -91,6 +97,13 @@ def one_schedule(seed: int, mesh, depths=(2,), per_request: bool = False,
             (name, seed, [d for d in zip(ref, results) if d[0] != d[1]][:1])
         m = replay_schedule_against_model(eng.schedule, _seeded_model(pk, pv))
         check_shard_state(eng, m)
+        fused = kw.get("fused_tick", kw.get("coalesce", True)) is not False
+        if fused:
+            assert eng.batch_calls["fused_tick"] > 0, (name, eng.batch_calls)
+            assert eng.batch_calls["probe"] == eng.batch_calls["delete"] \
+                == eng.batch_calls["insert"] == 0, (name, eng.batch_calls)
+        else:
+            assert eng.batch_calls["fused_tick"] == 0, (name, eng.batch_calls)
     return True
 
 
@@ -168,6 +181,71 @@ def grow_under_pipeline(seed: int = 5):
         "grow duplicated keys"
     print("GROW-UNDER-PIPELINE OK", eng.grow_events, "grows,",
           eng.stall_events, "stalls")
+
+
+def keys_owned_by(shard: int, n: int, cfg, num_shards: int,
+                  shard_by: str = "highbits", start: int = 0) -> np.ndarray:
+    """First ``n`` keys >= start that the RLU router assigns to ``shard`` —
+    the raw material for adversarial all-keys-to-one-shard schedules."""
+    out, k = [], start
+    while len(out) < n:
+        batch = np.arange(k, k + 4096, dtype=np.uint32)
+        owners = rlu.owner_of_np(batch, cfg, num_shards, shard_by)
+        out.extend(batch[owners == shard][:n - len(out)].tolist())
+        k += 4096
+    return np.asarray(out, np.uint32)
+
+
+def fused_worst_skew(seed: int = 7):
+    """Adversarial skew: EVERY key routes to shard 0, so the measured
+    per-(src,dst) max equals the whole local batch — capacity must rise to
+    Q_local (never truncate) and results must still be bit-equal to the
+    host reference and the model."""
+    mesh = make_serving_mesh()
+    cfg = _cfg()
+    D = mesh.shape["model"]
+    hot = keys_owned_by(0, 64, cfg, D)
+    rng = np.random.default_rng(seed)
+    streams = []
+    for r in range(16):
+        ops = []
+        for _ in range(3):
+            k = int(rng.choice(hot))
+            v = int(rng.integers(1, 2**20))
+            kind = rng.choice(["insert", "read", "update", "delete"],
+                              p=[0.4, 0.3, 0.2, 0.1])
+            ops.append({"insert": ("insert", k, v), "read": ("read", k),
+                        "update": ("update", k, v),
+                        "delete": ("delete", k)}[kind])
+        streams.append(ops)
+    preload = (hot[:16], np.arange(1, 17, dtype=np.uint32))
+
+    host, ref = run_streams(streams, cfg=cfg, num_shards=D, preload=preload)
+    eng, results = run_streams(streams, cfg=cfg, mesh=mesh, preload=preload)
+    assert results == ref, "worst-skew fused tick diverged from host"
+    model = replay_schedule_against_model(eng.schedule,
+                                          _seeded_model(*preload))
+    check_shard_state(eng, model)
+    # two-pass capacity: tracked the measured max, and never truncated —
+    # every recorded cap is >= the exact measured per-(src,dst) count
+    assert eng.route_cap_log, "fused engine recorded no routing capacities"
+    for rec in eng.route_cap_log:
+        for ql, cap, mx in zip(rec["q_local"], rec["cap"], rec["max"]):
+            assert mx <= cap <= ql, rec
+    print("WORST-SKEW OK", len(eng.route_cap_log), "fused launches")
+
+
+def fused_smoke(n: int = 4):
+    """Fast fused-vs-unfused guard for `make ci`: a handful of schedules on
+    2 forced devices, fused and three-call mesh paths both bit-compared to
+    the host reference (one_schedule does exactly that), plus the
+    worst-skew capacity check."""
+    mesh = make_serving_mesh()
+    for i in range(n):
+        one_schedule(6000 + i, mesh, depths=(2,), per_request=False,
+                     zipf_theta=0.99 if i % 2 else 0.0)
+    fused_worst_skew()
+    print(f"FUSED SMOKE OK {n} schedules")
 
 
 def kill_mid_pipeline(seed: int = 11):

@@ -1,0 +1,111 @@
+"""Bench-trajectory gate unit tests (ISSUE 6 bugfix).
+
+The old gate compared the newest run against the best of ALL prior runs,
+so a single fluke-fast run ratcheted the bar forever; and a metric
+appearing for the first time was skipped silently.  ``check_runs`` now
+windows the baseline (best of the last K prior runs) and surfaces
+first-appearance metrics as warnings.
+"""
+import json
+
+import pytest
+
+from tools.bench_check import DEFAULT_WINDOW, check_file, check_runs
+
+
+def _run(**metrics):
+    return dict(metrics)
+
+
+def _row_run(name, **metrics):
+    return {"rows": [{"name": name, **metrics}]}
+
+
+def test_fluke_outside_window_does_not_fail():
+    """A one-off 10x-fast fluke ages out of the window: runs at the steady
+    level keep passing once the fluke is > window runs old."""
+    fluke = _run(ops_per_sec=10_000.0)
+    steady = [_run(ops_per_sec=1_000.0) for _ in range(DEFAULT_WINDOW)]
+    newest = _run(ops_per_sec=950.0)
+    runs = [fluke] + steady + [newest]
+    failures, warnings, compared = check_runs(runs, threshold=1.5)
+    assert failures == [] and warnings == []
+    assert compared == 1
+    # ... but with window=0 (old best-of-ALL behaviour) the fluke still
+    # ratchets the bar and the same trajectory fails
+    failures0, _, _ = check_runs(runs, threshold=1.5, window=0)
+    assert len(failures0) == 1
+    assert failures0[0][0] == "ops_per_sec"
+
+
+def test_fluke_inside_window_still_guards():
+    """A recent (in-window) best IS the baseline — a real cliff right
+    after a fast run must still fail."""
+    runs = [_run(ops_per_sec=1_000.0), _run(ops_per_sec=1_000.0),
+            _run(ops_per_sec=100.0)]
+    failures, _, _ = check_runs(runs, threshold=1.5)
+    assert len(failures) == 1
+    name, direction, best, newest, ratio = failures[0]
+    assert name == "ops_per_sec" and direction == "up"
+    assert ratio == pytest.approx(10.0)
+
+
+def test_new_metric_warns_instead_of_silent_skip():
+    runs = [_row_run("mesh", ops_per_sec=500.0),
+            {"rows": [{"name": "mesh", "ops_per_sec": 510.0},
+                      {"name": "mesh_fused", "ops_per_sec": 900.0,
+                       "calls_per_tick": 1.0}]}]
+    failures, warnings, compared = check_runs(runs, threshold=1.5)
+    assert failures == []
+    assert set(warnings) == {"mesh_fused.ops_per_sec",
+                             "mesh_fused.calls_per_tick"}
+    assert compared == 1  # only the pre-existing mesh row was guarded
+
+
+def test_new_metric_guarded_from_next_run_on():
+    runs = [_row_run("m", calls_per_tick=1.0),
+            _row_run("m", calls_per_tick=3.0)]
+    failures, warnings, _ = check_runs(runs, threshold=1.5)
+    assert warnings == []
+    assert len(failures) == 1
+    name, direction, best, newest, ratio = failures[0]
+    # calls_per_tick is lower-better: regressing 1 -> 3 launches trips it
+    assert name == "m.calls_per_tick" and direction == "down"
+    assert ratio == pytest.approx(3.0)
+
+
+def test_lower_better_regression_direction():
+    runs = [_run(us_per_probe=2.0), _run(us_per_probe=2.1)]
+    failures, _, _ = check_runs(runs, threshold=1.5)
+    assert failures == []  # within band (noisy metric gets 2x band anyway)
+    runs = [_run(insert_ms=2.0), _run(insert_ms=4.0)]
+    failures, _, _ = check_runs(runs, threshold=1.5)
+    assert len(failures) == 1 and failures[0][1] == "down"
+
+
+def test_skip_fields_never_guarded():
+    runs = [_run(route_cap_mean=2.0, wall_seconds=1.0, stall_events=0.0),
+            _run(route_cap_mean=64.0, wall_seconds=50.0, stall_events=9.0)]
+    failures, warnings, compared = check_runs(runs, threshold=1.5)
+    assert failures == [] and warnings == [] and compared == 0
+
+
+def test_check_file_end_to_end(tmp_path, capsys):
+    path = tmp_path / "BENCH_x.json"
+    path.write_text(json.dumps({"runs": [
+        _row_run("k", ops_per_sec=1000.0),
+        {"rows": [{"name": "k", "ops_per_sec": 980.0,
+                   "new_thing_ops_per_sec": 5.0}]},
+    ]}))
+    failures = check_file(str(path), threshold=1.5)
+    out = capsys.readouterr().out
+    assert failures == []
+    assert "NEW METRIC k.new_thing_ops_per_sec" in out
+    # regression path
+    path.write_text(json.dumps({"runs": [
+        _row_run("k", ops_per_sec=1000.0),
+        _row_run("k", ops_per_sec=100.0),
+    ]}))
+    failures = check_file(str(path), threshold=1.5)
+    assert len(failures) == 1
+    assert "REGRESSION" in capsys.readouterr().out

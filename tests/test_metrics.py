@@ -1,0 +1,90 @@
+"""Metrics edge cases (ISSUE 6 bugfix): degenerate sample sets.
+
+``percentile`` used to hand an empty list straight to ``np.percentile``
+(IndexError) and ``snapshot()`` could emit NaN/Infinity for a drained
+engine (zero completed requests, zero ticks) — and ``Infinity`` is not
+even valid JSON, so one idle snapshot corrupted a BENCH trajectory file.
+Now every scalar goes through ``finite()`` and ``to_json`` runs with
+``allow_nan=False`` as a backstop.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.serving.metrics import MetricsCollector, finite, percentile
+
+
+def _walk_scalars(obj, path=""):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from _walk_scalars(v, f"{path}.{k}")
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            yield from _walk_scalars(v, f"{path}[{i}]")
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        yield path, float(obj)
+
+
+def test_finite_coercion():
+    assert finite(1.5) == 1.5
+    assert finite(float("nan")) == 0.0
+    assert finite(float("inf")) == 0.0
+    assert finite(float("-inf")) == 0.0
+    assert finite(float("nan"), default=-1.0) == -1.0
+    assert finite(np.float64(3.0)) == 3.0
+
+
+def test_percentile_empty_and_single():
+    # empty: no raise, defined value
+    assert percentile([], 50) == 0.0
+    assert percentile([], 99) == 0.0
+    assert percentile(np.array([]), 0) == 0.0
+    # single sample: that sample for EVERY q
+    for q in (0, 50, 99, 100):
+        assert percentile([7.5], q) == 7.5
+    # NaN samples are coerced, never propagated
+    assert percentile([float("nan")], 50) == 0.0
+    # sanity on a real set
+    assert percentile(list(range(1, 101)), 50) == pytest.approx(50.5)
+
+
+def test_empty_snapshot_is_finite_and_json_safe():
+    """A collector that never saw a request or a tick must snapshot to
+    all-finite scalars and round-trip through strict JSON."""
+    m = MetricsCollector()
+    snap = m.snapshot()
+    scalars = dict(_walk_scalars(snap))
+    assert scalars, "snapshot produced no scalars at all?"
+    for path, v in scalars.items():
+        assert math.isfinite(v), f"non-finite {path} = {v}"
+    assert snap["ops_per_sec"] >= 0.0
+    assert snap["ops_per_tick"] == 0.0
+    assert snap["request_latency_ticks"]["p50"] == 0.0
+    assert snap["request_latency_ms"]["p99"] == 0.0
+    assert snap["occupancy"]["mean"] == 0.0
+    # strict JSON: allow_nan=False raises on any Infinity/NaN leak
+    doc = json.loads(m.to_json())
+    assert doc["ticks"] == 0 and doc["total_ops"] == 0
+
+
+def test_single_sample_snapshot():
+    m = MetricsCollector()
+    m.record_tick(4, 2, 0.001)
+    m.record_request(3, 0.002)
+    snap = m.snapshot()
+    assert snap["request_latency_ticks"]["p50"] == 3
+    assert snap["request_latency_ticks"]["p99"] == 3
+    assert snap["request_latency_ms"]["p50"] == pytest.approx(2.0)
+    assert snap["ops_per_tick"] == 4.0
+    json.loads(m.to_json())  # still strict-JSON clean
+
+
+def test_zero_wall_clock_guard():
+    """ops_per_sec with a frozen clock must not emit inf."""
+    m = MetricsCollector()
+    m.record_tick(10, 1, 0.0)
+    m.t0 = __import__("time").perf_counter()  # wall ~ 0
+    snap = m.snapshot()
+    assert math.isfinite(snap["ops_per_sec"])

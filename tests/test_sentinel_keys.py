@@ -1,0 +1,116 @@
+"""Reserved pad/sentinel key domain enforcement (ISSUE 6 bugfix).
+
+A user key equal to ROUTE_PAD (0xFFFFFFF0) used to be accepted by the
+engine and then silently treated as routing padding by the sharded RLU
+paths: never stored, probes always miss, no error anywhere.  The fix
+closes the key domain at the engine/tenancy boundary with real
+ValueErrors (not asserts — they must survive ``python -O``):
+
+  * submit() rejects any op whose key (or scan range end) reaches the
+    reserved range [0xFFFFFFF0, 0xFFFFFFFF] — through BOTH shard
+    backends (host shard list and mesh/shard_map);
+  * preload() rejects reserved keys the same way;
+  * tenanted keys are bounded by the tenant key space instead (folding
+    keeps them below the reserved floor; TenantSpace.fold double-checks);
+  * the highest usable key 0xFFFFFFEF still round-trips
+    insert -> probe -> delete normally on both backends.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import HashMemConfig
+from repro.core.rlu import ROUTE_PAD
+from repro.serving import PAD_KEY, Request, ServingEngine, TenantRegistry
+
+RESERVED = (0xFFFFFFF0, 0xFFFFFFFE, 0xFFFFFFFF)   # ROUTE_PAD, TOMBSTONE, EMPTY
+TOP_OK = 0xFFFFFFEF                               # highest usable key
+
+
+def _cfg():
+    return HashMemConfig(num_buckets=32, slots_per_page=16,
+                         overflow_pages=32, max_chain=8, backend="ref")
+
+
+def _engines():
+    """One engine per shard backend: host shard list and in-process mesh."""
+    from repro.launch.mesh import make_serving_mesh
+    yield "host", ServingEngine(_cfg(), max_slots=4, num_shards=2)
+    yield "mesh", ServingEngine(_cfg(), max_slots=4,
+                                mesh=make_serving_mesh(1))
+
+
+def test_pad_key_is_route_pad():
+    # the engine's reserved floor IS the RLU routing pad sentinel
+    assert int(PAD_KEY) == int(ROUTE_PAD) == 0xFFFFFFF0
+
+
+def test_submit_rejects_reserved_keys_both_backends():
+    for backend, eng in _engines():
+        for key in RESERVED:
+            for op in (("read", key), ("insert", key, 1),
+                       ("update", key, 1), ("delete", key),
+                       ("rmw", key, 1)):
+                with pytest.raises(ValueError, match="reserved"):
+                    eng.submit(Request(ops=[op]))
+        # a scan that STARTS below the floor but reaches into it
+        with pytest.raises(ValueError, match="reserved"):
+            eng.submit(Request(ops=[("scan", int(PAD_KEY) - 2, 8)]))
+        # nothing was admitted or queued by the rejected submits
+        st = eng.stats()
+        assert st["occupancy"] == 0 and st["pending"] == 0, backend
+
+
+def test_top_usable_key_roundtrips_both_backends():
+    for backend, eng in _engines():
+        r1 = Request(ops=[("insert", TOP_OK, 77), ("read", TOP_OK)])
+        eng.submit(r1)
+        eng.run()
+        assert r1.results[0]["ok"], backend
+        assert r1.results[1]["found"] and r1.results[1]["value"] == 77, \
+            backend
+        r2 = Request(ops=[("delete", TOP_OK), ("read", TOP_OK)])
+        eng.submit(r2)
+        eng.run()
+        assert r2.results[0]["found"], backend
+        assert not r2.results[1]["found"], backend
+
+
+def test_preload_rejects_reserved_keys():
+    for backend, eng in _engines():
+        for key in RESERVED:
+            ks = np.array([1, 2, key], dtype=np.uint32)
+            with pytest.raises(ValueError, match="reserved"):
+                eng.preload(ks, np.arange(3, dtype=np.uint32))
+        # boundary: the floor itself is rejected, one below is fine
+        with pytest.raises(ValueError, match="reserved"):
+            eng.preload(np.array([int(PAD_KEY)], np.uint32),
+                        np.array([1], np.uint32))
+        eng.preload(np.array([TOP_OK], np.uint32),
+                    np.array([5], np.uint32))
+        r = Request(ops=[("read", TOP_OK)])
+        eng.submit(r)
+        eng.run()
+        assert r.results[0]["found"] and r.results[0]["value"] == 5, backend
+
+
+def test_tenant_keys_bounded_by_tenant_space():
+    reg = TenantRegistry()
+    t = reg.register("T")
+    eng = ServingEngine(_cfg(), max_slots=4, tenants=reg)
+    # tenant keys are validated against the (smaller) tenant key space,
+    # long before they could reach the reserved range post-folding
+    with pytest.raises(ValueError):
+        eng.submit(Request(ops=[("read", reg.space.key_space)], tenant=t))
+    with pytest.raises(ValueError):
+        eng.submit(Request(ops=[("insert", 0xFFFFFFF0, 1)], tenant=t))
+    ok = Request(ops=[("insert", reg.space.key_space - 1, 3),
+                      ("read", reg.space.key_space - 1)], tenant=t)
+    eng.submit(ok)
+    eng.run()
+    assert ok.results[1]["found"] and ok.results[1]["value"] == 3
+
+
+def test_unknown_op_kind_rejected():
+    eng = ServingEngine(_cfg(), max_slots=4)
+    with pytest.raises(ValueError, match="unknown op kind"):
+        eng.submit(Request(ops=[("upsert", 1, 2)]))

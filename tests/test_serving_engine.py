@@ -46,9 +46,9 @@ def test_one_batched_call_per_phase_per_tick():
     eng.submit_all([Request(ops=[("insert", k, k + 1), ("read", k)])
                     for k in range(16)])
     eng.tick()
-    assert eng.calls_last_tick == {"probe": 0, "delete": 0, "insert": 1}
+    assert eng.calls_last_tick == {"probe": 0, "delete": 0, "insert": 1, "fused_tick": 0}
     eng.tick()
-    assert eng.calls_last_tick == {"probe": 1, "delete": 0, "insert": 0}
+    assert eng.calls_last_tick == {"probe": 1, "delete": 0, "insert": 0, "fused_tick": 0}
     # jaxpr-traced counter: the coalesced call is 3 pool scatters TOTAL,
     # i.e. constant in the number of coalesced requests
     keys = jnp.arange(16, dtype=jnp.uint32)
@@ -355,9 +355,9 @@ def test_pipelined_tick_call_counts_unchanged():
     eng.submit_all([Request(ops=[("insert", k, k + 1), ("read", 100 + k)])
                     for k in range(16)])
     eng.tick()
-    assert eng.calls_last_tick == {"probe": 0, "delete": 0, "insert": 1}
+    assert eng.calls_last_tick == {"probe": 0, "delete": 0, "insert": 1, "fused_tick": 0}
     eng.tick()
-    assert eng.calls_last_tick == {"probe": 1, "delete": 0, "insert": 0}
+    assert eng.calls_last_tick == {"probe": 1, "delete": 0, "insert": 0, "fused_tick": 0}
     assert eng.stats()["pipeline"]["depth"] == 2
 
 
@@ -413,11 +413,20 @@ def test_mesh_backend_single_device_matches_host():
     assert eng.stats()["mesh_backed"]
     got2, eng2 = run(mesh=mesh, pipeline_depth=2)
     assert got2 == ref
-    # every non-empty phase was exactly ONE rlu call
-    eng3 = _engine(max_slots=8, mesh=mesh)
-    eng3.submit_all([Request(ops=[("insert", k, k)]) for k in range(8)])
-    eng3.tick()
-    assert eng3.calls_last_tick == {"probe": 0, "delete": 0, "insert": 1}
+    # the unfused mesh path agrees too, and keeps the per-phase contract
+    got3, eng3 = run(mesh=mesh, fused_tick=False)
+    assert got3 == ref
+    assert not eng3.fused_tick
+    # a tick with only inserts: fused default = ONE whole-tick launch;
+    # fused_tick=False = exactly ONE rlu call for the non-empty phase
+    for fused, want in ((None, {"probe": 0, "delete": 0, "insert": 0,
+                                "fused_tick": 1}),
+                        (False, {"probe": 0, "delete": 0, "insert": 1,
+                                 "fused_tick": 0})):
+        eng4 = _engine(max_slots=8, mesh=mesh, fused_tick=fused)
+        eng4.submit_all([Request(ops=[("insert", k, k)]) for k in range(8)])
+        eng4.tick()
+        assert eng4.calls_last_tick == want, (fused, eng4.calls_last_tick)
 
 
 def test_same_tick_write_contention_is_serialized():

@@ -8,16 +8,22 @@ subprocess imports the driver from tests/sharded_driver.py.
 
 Covered here:
 
-  * call-count acceptance — a coalesced tick on a >= 2-device mesh issues
-    EXACTLY one probe_sharded / sharded-delete / sharded-insert call per
-    phase, however many requests and shards feed it (engine counters), and
-    one such call lowers to exactly ONE shard_map no matter the batch size
-    (jaxpr-level, core.introspect.count_primitive);
+  * call-count acceptance — a coalesced tick on a >= 2-device mesh is ONE
+    fused rlu.tick_mesh launch for ALL phases (the whole-tick megakernel,
+    the default), or exactly one probe/delete/insert call per phase with
+    ``fused_tick=False`` (engine counters); the fused launch lowers to
+    exactly ONE shard_map and a fixed all_to_all budget no matter the
+    batch size (jaxpr-level, core.introspect.count_primitive);
+  * two-pass skew-aware routing — the fused tick's per-(src,dst) routing
+    capacity follows the measured key skew (jaxpr buffer shapes change
+    with the DATA, not just the batch shape; introspect.primitive_shapes),
+    never truncates under adversarial all-keys-to-one-shard skew, and
+    stays <= the worst-case Q_local padding;
   * the sharded differential sweep — 200+ randomized mixed schedules
-    (uniform AND zipfian-contended), each run with pipelining off and on
-    (and periodically per-request), bit-compared against the host-shard
-    reference and replayed op-for-op against the DictModel, with per-shard
-    ownership/population invariants;
+    (uniform AND zipfian-contended), each run fused and unfused, with
+    pipelining off and on (and periodically per-request), bit-compared
+    against the host-shard reference and replayed op-for-op against the
+    DictModel, with per-shard ownership/population invariants;
   * fault injection — a request killed between pipelined ticks (slot
     reclamation, no ghost ops) and synchronized growth forced inside a
     pipelined window (no lost or duplicated keys).
@@ -44,26 +50,40 @@ def run_sub(code: str, devices: int = 2, timeout: int = 900):
 
 
 def test_mesh_tick_exactly_one_call_per_phase():
-    """16 mixed requests on a 2-device mesh: ONE backend call per op phase
-    in the tick — versus one call per op in per-request mode."""
+    """16 mixed requests on a 2-device mesh: ONE fused launch for the whole
+    tick by default, one backend call per op phase with fused_tick=False —
+    versus one call per op in per-request mode."""
     run_sub("""
         import numpy as np
         from sharded_driver import _cfg
         from repro.launch.mesh import make_serving_mesh
         from repro.serving import Request, ServingEngine
         mesh = make_serving_mesh()
-        eng = ServingEngine(_cfg(), mesh=mesh, max_slots=16)
-        eng.preload(np.arange(32, dtype=np.uint32),
-                    np.arange(32, dtype=np.uint32) + 7)
-        reqs = [Request(ops=[("read", k)]) for k in range(6)] + \\
+        ZERO = {"probe": 0, "delete": 0, "insert": 0, "fused_tick": 0}
+        reqs = lambda: [Request(ops=[("read", k)]) for k in range(6)] + \\
                [Request(ops=[("update", k, 99)]) for k in range(6, 10)] + \\
                [Request(ops=[("delete", k)]) for k in range(10, 13)] + \\
                [Request(ops=[("rmw", k, 5)]) for k in range(13, 16)]
-        eng.submit_all(reqs)
+        # DEFAULT: coalesced mesh tick is the fused megakernel — ONE launch
+        # for probe+delete+insert, zero per-phase calls
+        eng = ServingEngine(_cfg(), mesh=mesh, max_slots=16)
+        assert eng.fused_tick
+        eng.preload(np.arange(32, dtype=np.uint32),
+                    np.arange(32, dtype=np.uint32) + 7)
+        eng.submit_all(reqs())
         eng.tick()
-        assert eng.calls_last_tick == {"probe": 1, "delete": 1, "insert": 1}, \\
+        assert eng.calls_last_tick == dict(ZERO, fused_tick=1), \\
             eng.calls_last_tick
-        # pipelined tick: still one call per phase
+        # fused_tick=False: the three-call per-phase contract still holds
+        engu = ServingEngine(_cfg(), mesh=mesh, max_slots=16,
+                             fused_tick=False)
+        engu.preload(np.arange(32, dtype=np.uint32),
+                     np.arange(32, dtype=np.uint32) + 7)
+        engu.submit_all(reqs())
+        engu.tick()
+        assert engu.calls_last_tick == dict(ZERO, probe=1, delete=1,
+                                            insert=1), engu.calls_last_tick
+        # pipelined fused tick: still one launch per tick, phases or not
         eng2 = ServingEngine(_cfg(), mesh=mesh, max_slots=16,
                              pipeline_depth=2)
         eng2.preload(np.arange(32, dtype=np.uint32),
@@ -71,9 +91,9 @@ def test_mesh_tick_exactly_one_call_per_phase():
         eng2.submit_all([Request(ops=[("update", k, 1), ("read", k + 20)])
                          for k in range(16)])
         eng2.tick()
-        assert eng2.calls_last_tick == {"probe": 0, "delete": 1, "insert": 1}
+        assert eng2.calls_last_tick == dict(ZERO, fused_tick=1)
         eng2.tick()
-        assert eng2.calls_last_tick == {"probe": 1, "delete": 0, "insert": 0}
+        assert eng2.calls_last_tick == dict(ZERO, fused_tick=1)
         # per-request baseline: calls scale with ops
         eng3 = ServingEngine(_cfg(), mesh=mesh, max_slots=16, coalesce=False)
         eng3.preload(np.arange(32, dtype=np.uint32),
@@ -81,6 +101,7 @@ def test_mesh_tick_exactly_one_call_per_phase():
         eng3.submit_all([Request(ops=[("read", k)]) for k in range(16)])
         eng3.tick()
         assert eng3.calls_last_tick["probe"] == 16
+        assert eng3.calls_last_tick["fused_tick"] == 0
         print("OK")
         """)
 
@@ -116,6 +137,94 @@ def test_mesh_phase_is_one_shard_map_jaxpr():
             assert count_primitive(dele, "all_to_all", hm, q) == 2
             assert count_primitive(ins, "all_to_all", hm, q, v) == 3
         print("OK")
+        """)
+
+
+def test_fused_tick_is_one_shard_map_jaxpr():
+    """jaxpr-level megakernel contract: the whole fused tick — probe +
+    delete + insert — lowers to exactly ONE shard_map, constant in the
+    batch size, with a fixed all_to_all budget (1 count exchange + 3 probe
+    + 2 delete + 3 insert = 9 hops)."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from sharded_driver import _cfg
+        from repro.core import hashmap, rlu
+        from repro.core.introspect import count_primitive
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh()
+        cfg = _cfg()
+        D = mesh.shape["model"]
+        shards = [hashmap.create(cfg) for _ in range(D)]
+        hm = jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+        for Q in (D * 8, D * 64):
+            pq = jnp.zeros((Q,), jnp.uint32)
+            dq = jnp.zeros((Q,), jnp.uint32)
+            ik = jnp.zeros((Q,), jnp.uint32)
+            iv = jnp.zeros((Q,), jnp.uint32)
+            tick = lambda hm, pq, dq, ik, iv: rlu.tick_mesh(
+                mesh, hm, pq, dq, ik, iv, cfg, shard_by="highbits")
+            n_sm = count_primitive(tick, "shard_map", hm, pq, dq, ik, iv)
+            assert n_sm == 1, f"fused tick must be ONE shard_map, got {n_sm}"
+            n_a2a = count_primitive(tick, "all_to_all", hm, pq, dq, ik, iv)
+            assert n_a2a == 9, f"fused tick all_to_all budget: {n_a2a} != 9"
+        print("OK")
+        """)
+
+
+def test_fused_routing_capacity_is_data_dependent():
+    """Two-pass routing: two batches of the SAME shape but different key
+    skew trace to DIFFERENT all_to_all buffer shapes (pass 1 measures the
+    per-(src,dst) histogram and bakes the cap into the program), and a
+    uniform batch's cap sits well under the worst-case Q_local padding."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from sharded_driver import _cfg, keys_owned_by
+        from repro.core import hashmap, rlu
+        from repro.core.introspect import primitive_shapes
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh()
+        cfg = _cfg()
+        D = mesh.shape["model"]
+        shards = [hashmap.create(cfg) for _ in range(D)]
+        hm = jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+        Q = D * 64
+        ql = Q // D
+        # same SHAPE, different DATA: uniform spread vs all keys owned by
+        # shard 0 (sourced evenly, so every src sends its whole slice there)
+        rng = np.random.default_rng(0)
+        uni = rng.integers(0, 1 << 31, Q).astype(np.uint32)
+        skew = keys_owned_by(0, Q, cfg, D, shard_by="highbits")
+        caps = {}
+        shapes = {}
+        for name, keys in (("uniform", uni), ("skewed", skew)):
+            cap = rlu.routing_cap(keys, cfg, D, shard_by="highbits",
+                                  quantum=1)
+            caps[name] = cap
+            pq = jnp.asarray(keys)
+            z = jnp.zeros((Q,), jnp.uint32)
+            tick = lambda hm, pq, dq, ik, iv: rlu.tick_mesh(
+                mesh, hm, pq, dq, ik, iv, cfg, shard_by="highbits",
+                caps=(cap, cap, cap))
+            shapes[name] = primitive_shapes(tick, "all_to_all",
+                                            hm, pq, z, z, z)
+        # pass 1 (host histogram) saw the skew: capacities differ even
+        # though both batches have identical shape/dtype
+        assert caps["skewed"] == ql, caps
+        assert caps["uniform"] < ql, caps
+        # ... and that difference is STRUCTURAL in the lowered program:
+        # the routed all_to_all buffers have different shapes per batch
+        assert shapes["uniform"] != shapes["skewed"], shapes
+        print("OK caps", caps)
+        """)
+
+
+def test_fused_worst_skew_never_truncates():
+    """Adversarial all-keys-to-one-shard workload through the fused engine:
+    results stay bit-identical to the host reference (nothing truncated)
+    and every logged routing cap covers the measured per-(src,dst) max."""
+    run_sub("""
+        from sharded_driver import fused_worst_skew
+        fused_worst_skew()
         """)
 
 

@@ -46,9 +46,9 @@ def test_fold_sentinel_safety():
     sp = TenantSpace(bits=8)
     top = sp.fold(sp.max_tenants - 1, [sp.key_space - 1])[0]
     assert top < 0xFFFFFFF0
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         sp.fold(sp.max_tenants, [0])             # top id reserved
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         sp.fold(0, [sp.key_space])               # key too wide
 
 

@@ -2,20 +2,28 @@
 
 BENCH_kernels.json / BENCH_serving.json accumulate one run per PR (a
 ``runs`` list, benchmarks/bench_util.py).  This tool compares the NEWEST
-run against the BEST prior run, metric by metric, and fails (exit 1) on a
->``--threshold``x regression — the container is noisy, so the default bar
-is the ISSUE-5 1.5x, loose enough to ignore jitter and tight enough to
-catch a real perf cliff landing in a PR.
+run against the best of the LAST ``--window`` prior runs, metric by
+metric, and fails (exit 1) on a >``--threshold``x regression — the
+container is noisy, so the default bar is the ISSUE-5 1.5x, loose enough
+to ignore jitter and tight enough to catch a real perf cliff landing in a
+PR.
+
+The windowed baseline fixes two failure modes of the old best-of-ALL-runs
+scan: a one-off fluke run no longer ratchets the bar forever (it ages out
+of the window), and a metric that appears for the FIRST time in the newest
+run is reported as a visible ``NEW METRIC`` warning instead of being
+skipped silently (it has no baseline; the next run will guard it).
 
 Metric direction is inferred from the name: ``*us_per*`` / ``*ms*`` /
-``*ns_per*`` are lower-better latencies; ``*ops_per_sec`` / ``*speedup*``
-are higher-better throughputs.  Rows are matched across runs by their
-``name`` field; run-level scalar metrics (e.g.
-``speedup_coalesced_vs_per_request``) are compared too.  Metrics missing
-from either side are skipped, so adding new bench rows never trips the
-guard.
+``*ns_per*`` / ``*calls_per_tick*`` are lower-better; ``*ops_per_sec`` /
+``*speedup*`` are higher-better throughputs.  ``calls_per_tick`` guards
+the fused-tick launch contract (a coalesced mesh tick is ONE shard_map
+launch — a regression back to 3 trips the gate); ``route_cap`` fields are
+workload-dependent telemetry, never guarded.  Rows are matched across runs
+by their ``name`` field; run-level scalar metrics (e.g.
+``speedup_coalesced_vs_per_request``) are compared too.
 
-Usage:  python tools/bench_check.py [--threshold 1.5] [FILE ...]
+Usage:  python tools/bench_check.py [--threshold 1.5] [--window 5] [FILE ...]
         (default: both BENCH files that exist in the repo root)
 """
 from __future__ import annotations
@@ -25,10 +33,13 @@ import json
 import os
 import sys
 
-LOWER_BETTER = ("us_per", "ms", "ns_per", "wall_seconds")
+DEFAULT_WINDOW = 5
+
+LOWER_BETTER = ("us_per", "ms", "ns_per", "wall_seconds", "calls_per_tick")
 HIGHER_BETTER = ("ops_per_sec", "speedup")
-# wall-clock noise-dominated fields we never guard
-SKIP = ("request_latency", "tick_ms", "wall_seconds")
+# wall-clock noise-dominated or workload-dependent fields we never guard
+SKIP = ("request_latency", "tick_ms", "wall_seconds", "route_cap",
+        "stall_events")
 # eager / interpret-mode timings swing ~1.5x between runs on this container
 # (see CHANGES.md PR 2: "3.7-5.5 us/elem across runs on this noisy
 # container"); they get 2x the band so the guard trips on cliffs, not noise
@@ -66,16 +77,16 @@ def _run_metrics(run: dict) -> dict:
     return out
 
 
-def check_file(path: str, threshold: float) -> list:
-    with open(path) as f:
-        doc = json.load(f)
-    runs = doc.get("runs", [])
-    if len(runs) < 2:
-        print(f"{path}: {len(runs)} run(s), nothing to compare")
-        return []
+def check_runs(runs: list, threshold: float,
+               window: int = DEFAULT_WINDOW) -> tuple:
+    """Newest run vs the best of the last ``window`` prior runs.  Returns
+    (failures, warnings, compared): failures are (name, direction, best,
+    newest, ratio); warnings are first-appearance metric names (present in
+    the newest run, absent from EVERY prior run — no baseline yet)."""
     newest = _run_metrics(runs[-1])
-    prior = [_run_metrics(r) for r in runs[:-1]]
-    failures = []
+    prior_all = [_run_metrics(r) for r in runs[:-1]]
+    prior = prior_all[-window:] if window > 0 else prior_all
+    failures, warnings = [], []
     compared = 0
     for name, (d, v) in newest.items():
         best = None
@@ -84,6 +95,9 @@ def check_file(path: str, threshold: float) -> list:
                 pv = p[name][1]
                 best = pv if best is None else (
                     max(best, pv) if d == "up" else min(best, pv))
+        if not any(name in p for p in prior_all):
+            warnings.append(name)
+            continue
         if best is None or best <= 0 or v <= 0:
             continue
         compared += 1
@@ -92,7 +106,23 @@ def check_file(path: str, threshold: float) -> list:
                            else 1.0)
         if ratio > bar:
             failures.append((name, d, best, v, ratio))
-    print(f"{path}: compared {compared} metrics across {len(runs)} runs")
+    return failures, warnings, compared
+
+
+def check_file(path: str, threshold: float,
+               window: int = DEFAULT_WINDOW) -> list:
+    with open(path) as f:
+        doc = json.load(f)
+    runs = doc.get("runs", [])
+    if len(runs) < 2:
+        print(f"{path}: {len(runs)} run(s), nothing to compare")
+        return []
+    failures, warnings, compared = check_runs(runs, threshold, window)
+    print(f"{path}: compared {compared} metrics, newest vs best of last "
+          f"{min(window, len(runs) - 1)} of {len(runs) - 1} prior runs")
+    for name in warnings:
+        print(f"  NEW METRIC {name}: first appearance, no prior baseline "
+              f"(guarded from the next run on)")
     for name, d, best, v, ratio in failures:
         want = "higher" if d == "up" else "lower"
         print(f"  REGRESSION {name}: best prior {best:.4g}, "
@@ -107,7 +137,10 @@ def main():
                          "next to the repo root)")
     ap.add_argument("--threshold", type=float, default=1.5,
                     help="fail when newest is this many times worse than "
-                         "the best prior run (default 1.5)")
+                         "the best prior run in the window (default 1.5)")
+    ap.add_argument("--window", type=int, default=DEFAULT_WINDOW,
+                    help="compare against the best of the last K prior "
+                         f"runs (default {DEFAULT_WINDOW}; 0 = all runs)")
     args = ap.parse_args()
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     files = args.files or [
@@ -119,7 +152,7 @@ def main():
         return 0
     failures = []
     for path in files:
-        failures += check_file(path, args.threshold)
+        failures += check_file(path, args.threshold, args.window)
     if failures:
         print(f"FAIL: {len(failures)} metric(s) regressed past "
               f"{args.threshold}x")
