@@ -2,7 +2,7 @@
 PYTHON ?= python
 
 .PHONY: test test-slow bench-kernels bench-json bench-serving \
-	bench-serving-mesh bench-smoke fused-smoke bench-check lint ci
+	bench-serving-mesh bench-smoke fused-smoke fp-smoke bench-check lint ci
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) -m pytest -x -q
@@ -45,6 +45,13 @@ fused-smoke:
 	PYTHONPATH=src:tests$${PYTHONPATH:+:$$PYTHONPATH} \
 	$(PYTHON) -c "from sharded_driver import fused_smoke; fused_smoke()"
 
+# fingerprint-ablation smoke: mixed insert/probe/delete/grow churn must be
+# bit-equal with fingerprints on vs off (pure filter) and match the
+# DictModel oracle, over (plain, displaced+stash) x (ref, perf)
+fp-smoke:
+	PYTHONPATH=src:tests$${PYTHONPATH:+:$$PYTHONPATH} \
+	$(PYTHON) -c "from fp_ablation import fp_smoke; fp_smoke()"
+
 # perf-trajectory regression guard: newest BENCH_*.json run vs the best of
 # the last 5 prior runs, >1.5x fails (noisy eager metrics get a 2x band;
 # first-appearance metrics warn; tools/bench_check.py)
@@ -57,5 +64,5 @@ lint:
 	$(PYTHON) tools/lint.py
 
 # the full gate: lint + tier-1 tests + bench smoke + fused differential
-# smoke + perf guard
-ci: lint test bench-smoke fused-smoke bench-check
+# smoke + fingerprint ablation + perf guard
+ci: lint test bench-smoke fused-smoke fp-smoke bench-check

@@ -159,13 +159,59 @@ def run(slots: int = 512, Q: int = 256):
                           overflow_pages=64, max_chain=2, backend=backend),
             jnp.asarray(keys), jnp.asarray(keys))
         vfn = lambda: hashmap.probe(hm2, q)[0].block_until_ready()
-        vfn()  # compile
-        t0 = time.perf_counter()
-        vfn()
-        dt = time.perf_counter() - t0
+        # min-of-5 (warmup excludes compile): single-shot wall times were
+        # the noisiest rows in the BENCH_kernels.json trajectory
+        dt = _bench(vfn, warmup=1, iters=5)
         rows.append({"name": f"kernel_interpret_{backend}",
                      "us_per_probe": dt / Q * 1e6})
     return rows
+
+
+def zipfian_rows_bench(theta: float = 0.99, Q: int = 2048,
+                       rounds: int = 6, per_round: int = 2048):
+    """YCSB-zipfian ``rows_activated_per_probe``, fingerprints on vs off.
+
+    Builds a displaced+fingerprinted table through insert/delete churn —
+    tombstoned slots accumulate mid-chain, so a fingerprint-blind probe
+    keeps activating pages whose keys can no longer match — then probes a
+    zipfian(theta) query batch over the live keys and reports the traced
+    mean row activations both ways (hashmap.rows_activated_per_probe).
+    The fp row is the headline: the paper's ~1 row per probe."""
+    import jax
+
+    cfg = HashMemConfig(num_buckets=64, slots_per_page=128,
+                        overflow_pages=256, max_chain=8, backend="ref",
+                        displacement=True, fingerprint_bits=12,
+                        stash_slots=256, auto_grow=False)
+    rng = np.random.default_rng(7)
+    allk = rng.choice(2**31, rounds * per_round, replace=False) \
+        .astype(np.uint32)
+    hm = hashmap.create(cfg)
+    live: list = []
+    for r in range(rounds):
+        ks = allk[r * per_round:(r + 1) * per_round]
+        hm, ok = hashmap.insert(hm, jnp.asarray(ks), jnp.asarray(ks * 3))
+        live.extend(int(k) for k in ks[np.asarray(ok)])
+        dead = rng.choice(len(live), len(live) // 3, replace=False)
+        dk = np.asarray(live, np.uint32)[dead]
+        hm, _ = hashmap.delete(hm, jnp.asarray(dk))
+        gone = set(int(k) for k in dk)     # keys are unique: one copy each
+        live = [k for k in live if k not in gone]
+    live_arr = np.asarray(live, np.uint32)
+    w = 1.0 / np.arange(1, len(live_arr) + 1, dtype=np.float64) ** theta
+    q = jnp.asarray(rng.choice(live_arr, Q, p=w / w.sum()))
+    ra_fp = float(hashmap.rows_activated_per_probe(hm, q))
+    ra_nofp = float(hashmap.rows_activated_per_probe(
+        hm, q, use_fingerprints=False))
+    st = hashmap.stats(hm)
+    return [{"name": "kernel_zipfian_rows_activated",
+             "rows_activated_per_probe_fp": ra_fp,
+             "rows_activated_per_probe_nofp": ra_nofp,
+             "fp_bits": cfg.fingerprint_bits,
+             "stash_slots": cfg.stash_slots,
+             "stash_live": int(st["stash_live"]),
+             "zipf_theta": theta,
+             "live_keys": int(len(live_arr))}]
 
 
 def main():
@@ -181,7 +227,7 @@ def main():
         args.json = True
     args.out = args.out or "BENCH_kernels.json"
 
-    rows = run() + insert_bench() + grow_bench()
+    rows = run() + zipfian_rows_bench() + insert_bench() + grow_bench()
     for r in rows:
         print(r)
     if args.json:

@@ -55,30 +55,42 @@ def _ratio(num: float, den: float) -> float:
 
 def run_mode(*, coalesce, workloads, slots, shards, record_count,
              ops_per_request, requests, seed, pipeline=1, mesh=None,
-             fused=None, tag="") -> dict:
+             fused=None, tag="", repeats=3) -> dict:
     kw = dict(slots=slots, shards=shards, record_count=record_count,
               ops_per_request=ops_per_request, coalesce=coalesce,
               pipeline_depth=pipeline, mesh=mesh, fused_tick=fused)
-    eng, gens = build_ycsb_engine(workloads, seed=seed, **kw)
-    per = requests // len(gens)
-    reqs = [r for g in gens for r in g.requests(per)]
-    # warmup: an identical engine (same config, slots => same padded batch
-    # shapes) compiles every op-kind trace outside the timed window — the
-    # module-level jit cache is shared, so the measured run is steady-state.
-    # Fused mesh rows need the warmup to REPLAY the same stream: two-pass
-    # routing bakes the measured capacity into the trace, so only the exact
-    # per-tick cap tuples the timed run will see are worth compiling.
-    fused_mesh = mesh is not None and coalesce and fused is not False
-    wseed = seed if fused_mesh else seed + 997
-    warm, wgens = build_ycsb_engine(workloads, seed=wseed, **kw)
-    wn = per if fused_mesh else 2 * slots // len(wgens)
-    warm.submit_all([r for g in wgens for r in g.requests(wn)])
+    # warmup: an identical engine REPLAYS the same request stream, so every
+    # trace the timed runs will see — op-kind combos, pipeline stall/drain
+    # shapes, and (fused mesh rows) the exact routed-capacity tuples baked
+    # in by two-pass routing — is compiled outside the timed window; the
+    # module-level jit cache is shared, so the measured runs are
+    # steady-state.  (A shorter different-seed warmup leaves pipelined rows
+    # paying first-compile inside the wall clock.)
+    warm, wgens = build_ycsb_engine(workloads, seed=seed, **kw)
+    per = requests // len(wgens)
+    warm.submit_all([r for g in wgens for r in g.requests(per)])
     warm.run()
 
-    t0 = time.perf_counter()
-    eng.submit_all(reqs)
+    # time the serving drain loop only, best of ``repeats`` fresh engines
+    # over the identical stream (the min-of-N discipline kernel_bench uses):
+    # a drain is a dozen ticks / tens of ms, so a single GC pause or
+    # scheduler hiccup mid-run swings a one-shot reading 2-3x.  The eng.run()
+    # call on the already-drained winner just takes the forced end-of-run
+    # telemetry sample (chain depth / rows activated) + snapshot, OUTSIDE
+    # the timed window.
+    wall, eng, reqs = float("inf"), None, None
+    for _ in range(max(repeats, 1)):
+        e, gens = build_ycsb_engine(workloads, seed=seed, **kw)
+        rq = [r for g in gens for r in g.requests(per)]
+        t0 = time.perf_counter()
+        e.submit_all(rq)
+        while not e.pool.idle() and e.ticks < 100_000:
+            e.tick()
+        e.flush()
+        w = time.perf_counter() - t0
+        if w < wall:
+            wall, eng, reqs = w, e, rq
     snap = eng.run()
-    wall = time.perf_counter() - t0
     name = tag or ("coalesced" if coalesce else "per_request")
     # two-pass routing telemetry (fused mesh rows): how far the measured
     # per-(src,dst) capacity sits below the Q_local worst-case padding
@@ -115,6 +127,10 @@ def run_mode(*, coalesce, workloads, slots, shards, record_count,
         "probe_hit_rate": snap["probe_hit_rate"],
         "grow_events": eng.grow_events,
         "compact_events": eng.compact_events,
+        "chain_depth_p50": snap["chain_depth"]["p50"],
+        "chain_depth_p99": snap["chain_depth"]["p99"],
+        "rows_activated_p50": snap["rows_activated"]["p50"],
+        "rows_activated_p99": snap["rows_activated"]["p99"],
         **route,
     }
 

@@ -255,6 +255,15 @@ class HashMemConfig:
                                      # hot chains long before the global
                                      # tombstone fraction trips)
 
+    # --- fingerprint lane + displacement/stash (Dash / IcebergHT) ---
+    fingerprint_bits: int = 0        # >0: per-slot fingerprint bit-planes;
+                                     # probes activate only fp-matching rows
+    displacement: bool = False       # insert tries the H2 bucket's direct
+                                     # page before chaining at H1; residue
+                                     # falls into the stash
+    stash_slots: int = 0             # per-table stash entries absorbing
+                                     # inserts both buckets reject
+
     @property
     def num_pages(self) -> int:
         return self.num_buckets + self.overflow_pages

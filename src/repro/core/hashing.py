@@ -49,3 +49,34 @@ def hash_to_bucket(keys, num_buckets: int, fn: str = "murmur3_fmix", salt: int =
     """keys (…,) uint32 -> bucket ids (…,) int32 in [0, num_buckets)."""
     h = HASH_FNS[fn](keys, salt)
     return (h % U32(num_buckets)).astype(jnp.int32)
+
+
+# Fixed salts for the fingerprint lane and the second (displacement) bucket
+# choice.  FP_SALT is independent of the table salt so the fingerprint of a
+# key is a pure function of (key, fp_bits) — PageStore can recompute it
+# without knowing the table config.  B2_SALT is XOR-folded into the table
+# salt so H2 stays decorrelated from H1 under any configured salt.
+FP_SALT = 0x7FEB352D
+B2_SALT = 0x68E31DA4
+
+
+def fingerprint(keys, fp_bits: int):
+    """keys (…,) uint32 -> low ``fp_bits`` of a salted murmur mix, uint32.
+
+    Deliberately NOT the bucket hash: a whole bucket shares hash%B, so
+    fingerprints must come from an independent mix or every key in a page
+    would collide.
+    """
+    return murmur3_fmix(keys, FP_SALT) & U32((1 << fp_bits) - 1)
+
+
+def hash_to_bucket2(keys, num_buckets: int, fn: str = "murmur3_fmix",
+                    salt: int = 0x9E3779B9):
+    """Second bucket choice for displacement inserts (IcebergHT H2).
+
+    Same contract as :func:`hash_to_bucket`.  Note the ``identity`` hash fn
+    ignores its salt, so H2 degenerates to H1 there — displacement then
+    adds nothing but stays correct (round 2 chains at the same bucket).
+    """
+    h = HASH_FNS[fn](keys, (salt ^ B2_SALT) & 0xFFFFFFFF)
+    return (h % U32(num_buckets)).astype(jnp.int32)

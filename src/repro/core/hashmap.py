@@ -73,7 +73,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import HashMemConfig
 from repro.core import layout
-from repro.core.hashing import EMPTY_KEY, TOMBSTONE_KEY, hash_to_bucket
+from repro.core.hashing import (EMPTY_KEY, TOMBSTONE_KEY, fingerprint,
+                                hash_to_bucket, hash_to_bucket2)
 
 I32 = jnp.int32
 U32 = jnp.uint32
@@ -125,7 +126,9 @@ def _keep_planes(cfg: HashMemConfig) -> bool:
 def create(cfg: HashMemConfig) -> HashMem:
     """Empty HashMem: every bucket pre-owns its direct page (paper §2.4)."""
     store = layout.empty_store(cfg.num_pages, cfg.slots_per_page,
-                               cfg.key_bits, with_planes=_keep_planes(cfg))
+                               cfg.key_bits, with_planes=_keep_planes(cfg),
+                               fp_bits=cfg.fingerprint_bits,
+                               stash_slots=cfg.stash_slots)
     store = dataclasses.replace(
         store, free_top=jnp.asarray(cfg.num_buckets, dtype=I32))
     return HashMem(
@@ -153,7 +156,16 @@ def build(cfg: HashMemConfig, keys: jax.Array, vals: jax.Array) -> HashMem:
 def build_with_buckets(cfg: HashMemConfig, keys: jax.Array, vals: jax.Array,
                        b: jax.Array) -> HashMem:
     """Bulk load with caller-supplied bucket ids (used by the RLU channel
-    layer, which derives (owner shard, local bucket) from one global hash)."""
+    layer, which derives (owner shard, local bucket) from one global hash).
+
+    Under ``cfg.displacement`` the load is replayed through the displaced
+    insert path (EMPTY_KEY pads are dropped, not stored, unlike the
+    chained bulk loader which stores whatever it is given)."""
+    if cfg.displacement:
+        k = keys.astype(U32)
+        hm, _ = _insert_displaced(create(cfg), k, vals, b,
+                                  valid=k != EMPTY_KEY)
+        return hm
     return _scatter_build(cfg, keys, vals, b, valid=None)
 
 
@@ -202,11 +214,24 @@ def _scatter_build(cfg: HashMemConfig, keys: jax.Array, vals: jax.Array,
     free_top = cfg.num_buckets + jnp.sum(n_over)
     planes = layout.pack_bitplanes(pool[..., layout.KEY_LANE], cfg.key_bits) \
         if _keep_planes(cfg) else None
+    fprints = None
+    if cfg.fingerprint_bits > 0:
+        fprints = layout.pack_bitplanes(
+            fingerprint(pool[..., layout.KEY_LANE], cfg.fingerprint_bits),
+            cfg.fingerprint_bits)
+    stash = stash_fill = None
+    if cfg.stash_slots > 0:
+        stash = jnp.broadcast_to(jnp.array([EMPTY_KEY, 0], dtype=U32),
+                                 (cfg.stash_slots, 2))
+        stash_fill = jnp.asarray(0, dtype=I32)
 
     store = layout.PageStore(pool=pool, planes=planes, page_next=page_next,
                              page_fill=page_fill,
                              free_top=free_top.astype(I32),
-                             key_bits=cfg.key_bits)
+                             key_bits=cfg.key_bits,
+                             fprints=fprints, stash=stash,
+                             stash_fill=stash_fill,
+                             fp_bits=cfg.fingerprint_bits)
     return HashMem(store=store,
                    bucket_head=jnp.arange(cfg.num_buckets, dtype=I32),
                    config=cfg)
@@ -305,12 +330,123 @@ def compact_due(hm: HashMem, tombstones: int, *, fraction: bool = True,
 # Probe / insert / delete
 # ---------------------------------------------------------------------------
 
+def resolve_pages_displaced(hm: HashMem, queries: jax.Array,
+                            b1: Optional[jax.Array] = None) -> jax.Array:
+    """Displaced page schedule: [H1 direct page] + [H2 chain], -1 padded.
+
+    Search order matches the displaced insert's placement order (H1 direct
+    first, then the H2 chain, then the stash — handled by the caller), so
+    the first match is still the oldest duplicate.  When b1 == b2 the H2
+    chain's head duplicates the direct page; it is blanked to -1 (only
+    position 0 can collide: overflow pages sit above num_buckets)."""
+    cfg = hm.config
+    q = queries.astype(U32)
+    if b1 is None:
+        b1 = hash_to_bucket(q, cfg.num_buckets, cfg.hash_fn, cfg.salt)
+    b2 = hash_to_bucket2(q, cfg.num_buckets, cfg.hash_fn, cfg.salt)
+    direct = hm.bucket_head[b1.astype(I32)][:, None]                  # (Q, 1)
+    chain = resolve_pages_by_bucket(hm, b2)                           # (Q, C)
+    head = jnp.where(chain[:, :1] == direct, -1, chain[:, :1])
+    return jnp.concatenate([direct, head, chain[:, 1:]], axis=1).astype(I32)
+
+
+def _fp_filter(store: layout.PageStore, queries: jax.Array,
+               pages: jax.Array) -> jax.Array:
+    """Fingerprint pre-pass: blank (to -1) every page of the schedule whose
+    fingerprint lane holds no slot matching the query's fingerprint.
+
+    This is the Dash trick on the paper's bit-plane layout: fp_bits narrow
+    plane words are scanned INSTEAD of activating the full (slots, 2) row;
+    only fp-matching rows survive to the wide fetch.  True matches are never
+    filtered (the lane is exact per slot); false positives (~S/2^fp_bits
+    slots per page) cost one extra row activation and are rejected by the
+    full key compare."""
+    fb = store.fp_bits
+    qfp = fingerprint(queries.astype(U32), fb)                        # (Q,)
+    rows = store.fprints[jnp.maximum(pages, 0)]                       # (Q,C,fb,W)
+    j = jnp.arange(fb, dtype=U32)
+    qbits = (qfp[:, None] >> j[None, :]) & U32(1)                     # (Q, fb)
+    qwords = jnp.where(qbits == U32(1), U32(0xFFFFFFFF), U32(0))
+    mism = rows ^ qwords[:, None, :, None]                            # (Q,C,fb,W)
+    agg = mism[:, :, 0, :]
+    for i in range(1, fb):       # OR over planes: bit set => some bit differs
+        agg = agg | mism[:, :, i, :]
+    hit = jnp.any(~agg != U32(0), axis=-1)                            # (Q, C)
+    return jnp.where(hit & (pages >= 0), pages, -1)
+
+
+def stash_probe(store: layout.PageStore, queries: jax.Array):
+    """(values, found) against the stash only — whole-stash compare, zero
+    row activations (the stash is register-resident by design)."""
+    q = queries.astype(U32)
+    m = store.stash[None, :, 0] == q[:, None]                         # (Q, T)
+    sf = jnp.any(m, axis=1)
+    sv = store.stash[jnp.argmax(m, axis=1), 1]    # argmax = oldest match
+    return jnp.where(sf, sv, U32(0)), sf
+
+
 def probe(hm: HashMem, queries: jax.Array, backend: Optional[str] = None):
     """Batched probe.  Returns (values (Q,) uint32, found (Q,) bool)."""
+    cfg = hm.config
+    b = hash_to_bucket(queries.astype(U32), cfg.num_buckets, cfg.hash_fn,
+                       cfg.salt)
+    return probe_with_buckets(hm, queries, b, backend)
+
+
+def probe_with_buckets(hm: HashMem, queries: jax.Array, b: jax.Array,
+                       backend: Optional[str] = None):
+    """``probe`` with caller-supplied H1 bucket ids (RLU channel layer).
+
+    Pipeline: resolve the page schedule (displaced or chained), fingerprint-
+    filter it when the lane is present, hand the surviving pages to the
+    backend, then fold in the stash (pool matches win: stash entries are by
+    construction the NEWEST duplicates of their key)."""
     from repro.core.probe import probe_pages   # local import to avoid cycle
-    pages = resolve_pages(hm, queries)
-    return probe_pages(hm, queries.astype(U32), pages,
-                       backend=backend or hm.config.backend)
+    cfg = hm.config
+    q = queries.astype(U32)
+    if cfg.displacement:
+        pages = resolve_pages_displaced(hm, q, b)
+    else:
+        pages = resolve_pages_by_bucket(hm, b.astype(I32))
+    if hm.store.fprints is not None:
+        pages = _fp_filter(hm.store, q, pages)
+    vals, found = probe_pages(hm, q, pages, backend=backend or cfg.backend)
+    if hm.store.stash is not None:
+        sv, sf = stash_probe(hm.store, q)
+        vals = jnp.where(found, vals, sv)
+        found = found | sf
+    return vals, found
+
+
+def rows_activated_per_probe(hm: HashMem, queries: jax.Array,
+                             use_fingerprints: bool = True,
+                             b: Optional[jax.Array] = None) -> jax.Array:
+    """Traced mean DRAM-row activations one probe of this batch costs —
+    the paper's unit of probe work, derived the same way kernel_bench's
+    ``scatters_per_insert`` is (from the op structure, not a timer).
+
+    A hit activates every unfiltered page up to and including the first
+    true match; a miss activates every unfiltered page of its schedule.
+    The stash is register-resident and counts zero."""
+    cfg = hm.config
+    q = queries.astype(U32)
+    if b is None:
+        b = hash_to_bucket(q, cfg.num_buckets, cfg.hash_fn, cfg.salt)
+    if cfg.displacement:
+        pages = resolve_pages_displaced(hm, q, b)
+    else:
+        pages = resolve_pages_by_bucket(hm, b.astype(I32))
+    if use_fingerprints and hm.store.fprints is not None:
+        pages = _fp_filter(hm.store, q, pages)
+    valid = pages >= 0
+    rows = hm.key_pages[jnp.maximum(pages, 0)]                        # (Q,C,S)
+    pmatch = jnp.any(rows == q[:, None, None], axis=-1) & valid
+    anym = jnp.any(pmatch, axis=1)
+    first = jnp.argmax(pmatch, axis=1)
+    upto = jnp.arange(pages.shape[1], dtype=I32)[None, :] <= first[:, None]
+    acts = jnp.where(anym, jnp.sum((valid & upto).astype(I32), axis=1),
+                     jnp.sum(valid.astype(I32), axis=1))
+    return jnp.mean(acts.astype(jnp.float32))
 
 
 def _write_key_bits(planes, page, slot, key, key_bits: int):
@@ -359,6 +495,17 @@ def insert(hm: HashMem, keys: jax.Array, vals: jax.Array,
 def insert_with_buckets(hm: HashMem, keys: jax.Array, vals: jax.Array,
                         b: jax.Array, valid: Optional[jax.Array] = None):
     """``insert`` with caller-supplied bucket ids (RLU channel layer).
+
+    Dispatches to the displaced path (H1 direct -> H2 chain -> stash) when
+    ``config.displacement`` is set, else to the chained append."""
+    if hm.config.displacement:
+        return _insert_displaced(hm, keys, vals, b, valid)
+    return _insert_chained(hm, keys, vals, b, valid)
+
+
+def _insert_chained(hm: HashMem, keys: jax.Array, vals: jax.Array,
+                    b: jax.Array, valid: Optional[jax.Array] = None):
+    """Chain-append insert at the buckets' existing tails.
 
     Three pool-shaped scatters total: the fused key/value row write
     (store.write_slots), the fill high-water max, and the chain-link set;
@@ -421,6 +568,73 @@ def insert_with_buckets(hm: HashMem, keys: jax.Array, vals: jax.Array,
                    config=cfg), ok_orig
 
 
+def _insert_displaced(hm: HashMem, keys: jax.Array, vals: jax.Array,
+                      b1: jax.Array, valid: Optional[jax.Array] = None):
+    """IcebergHT-style displaced insert: three rounds.
+
+      1. H1 direct page only (no chaining): fill-ranked append into the
+         bucket's own row while it has room.
+      2. Residue chains at H2 (``hash_to_bucket2``) via the normal chained
+         append — this is the only round that allocates overflow pages, so
+         chains grow at the SECOND hash's (near-uniform) bucket, not at the
+         skewed H1 hot spot.
+      3. Whatever both buckets reject falls into the stash (bump-allocated;
+         slots are not reused until a rebuild).
+
+    A key's round class is non-decreasing over its duplicates' lifetimes
+    (direct fill and chain capacity are monotone), and probes search
+    direct -> H2 chain -> stash, so the first match remains the OLDEST
+    duplicate — the same FIFO contract as the chained path.
+    """
+    cfg = hm.config
+    S = cfg.slots_per_page
+    n = keys.shape[0]
+    keys = keys.astype(U32)
+    vals = vals.astype(U32)
+    b1 = b1.astype(I32)
+    valid_all = jnp.ones((n,), bool) if valid is None else valid
+
+    # -- round 1: H1 direct page, fill-only (never allocates, never links) --
+    b = jnp.where(valid_all, b1, cfg.num_buckets)          # pads sort to end
+    order = jnp.argsort(b)
+    bs, ks, vs = b[order], keys[order], vals[order]
+    dropped = bs >= cfg.num_buckets
+    head = hm.bucket_head[jnp.minimum(bs, cfg.num_buckets - 1)]
+    fill = hm.page_fill[head]
+    start = jnp.searchsorted(bs, bs, side="left")
+    rank = jnp.arange(n, dtype=I32) - start.astype(I32)
+    pos = fill + rank
+    ok1s = (pos < S) & ~dropped
+    wp = jnp.where(ok1s, head, cfg.num_pages)              # OOB drop if !ok
+    slot = jnp.minimum(pos, S - 1).astype(I32)
+    store = hm.store.write_slots(wp, slot, ks, vs)
+    page_fill = store.page_fill.at[wp].max(slot + 1, mode="drop")
+    store = dataclasses.replace(store, page_fill=page_fill)
+    hm1 = HashMem(store=store, bucket_head=hm.bucket_head, config=cfg)
+    ok1 = ok1s[jnp.argsort(order)]
+
+    # -- round 2: chain the residue at H2 ----------------------------------
+    b2 = hash_to_bucket2(keys, cfg.num_buckets, cfg.hash_fn, cfg.salt)
+    hm2, ok2 = _insert_chained(hm1, keys, vals, b2, valid_all & ~ok1)
+
+    # -- round 3: stash the rest (batch order == age order) ----------------
+    st = hm2.store
+    if st.stash is None:
+        return hm2, ok1 | ok2
+    T = st.stash.shape[0]
+    valid3 = valid_all & ~ok1 & ~ok2
+    rank3 = jnp.cumsum(valid3.astype(I32)) - valid3.astype(I32)
+    pos3 = st.stash_fill + rank3
+    ok3 = valid3 & (pos3 < T)
+    sp = jnp.where(ok3, pos3, T)                           # OOB drop if !ok
+    stash = st.stash.at[sp].set(jnp.stack([keys, vals], axis=-1),
+                                mode="drop")
+    stash_fill = (st.stash_fill + jnp.sum(ok3.astype(I32))).astype(I32)
+    store = dataclasses.replace(st, stash=stash, stash_fill=stash_fill)
+    return HashMem(store=store, bucket_head=hm2.bucket_head,
+                   config=cfg), ok1 | ok2 | ok3
+
+
 def insert_scan(hm: HashMem, keys: jax.Array, vals: jax.Array):
     """Sequential per-element insert (paper §3.1 Listing 1) via ``lax.scan``.
 
@@ -432,7 +646,7 @@ def insert_scan(hm: HashMem, keys: jax.Array, vals: jax.Array):
     slots = cfg.slots_per_page
 
     def step(state, kv):
-        pool, planes, page_next, page_fill, free_top = state
+        pool, planes, fprints, page_next, page_fill, free_top = state
         k, v = kv
         b = hash_to_bucket(k[None], cfg.num_buckets, cfg.hash_fn, cfg.salt)[0]
         # walk to chain tail (bounded)
@@ -450,18 +664,24 @@ def insert_scan(hm: HashMem, keys: jax.Array, vals: jax.Array):
         pool = pool.at[wp, ts].set(jnp.stack([k, v]), mode="drop")  # fused k+v
         if planes is not None:
             planes = jnp.where(ok, _write_key_bits(planes, tp, ts, k, cfg.key_bits), planes)
+        if fprints is not None:
+            fprints = jnp.where(
+                ok, _write_key_bits(fprints, tp, ts,
+                                    fingerprint(k, cfg.fingerprint_bits),
+                                    cfg.fingerprint_bits), fprints)
         page_fill = page_fill.at[wp].set(ts + 1, mode="drop")
         do_link = need_new & ok
         page_next = page_next.at[jnp.where(do_link, last, cfg.num_pages)].set(
             new_page, mode="drop")
         free_top = free_top + do_link.astype(I32)
-        return (pool, planes, page_next, page_fill, free_top), ok
+        return (pool, planes, fprints, page_next, page_fill, free_top), ok
 
-    init = (hm.store.pool, hm.planes, hm.page_next, hm.page_fill, hm.free_top)
-    (pool, pl, pn, pf, ft), oks = jax.lax.scan(
+    init = (hm.store.pool, hm.planes, hm.store.fprints, hm.page_next,
+            hm.page_fill, hm.free_top)
+    (pool, pl, fp, pn, pf, ft), oks = jax.lax.scan(
         step, init, (keys.astype(U32), vals.astype(U32)))
-    store = layout.PageStore(pool=pool, planes=pl, page_next=pn, page_fill=pf,
-                             free_top=ft, key_bits=cfg.key_bits)
+    store = dataclasses.replace(hm.store, pool=pool, planes=pl, fprints=fp,
+                                page_next=pn, page_fill=pf, free_top=ft)
     return HashMem(store=store, bucket_head=hm.bucket_head, config=cfg), oks
 
 
@@ -480,6 +700,8 @@ def delete(hm: HashMem, keys: jax.Array):
 def delete_with_buckets(hm: HashMem, keys: jax.Array, b: jax.Array):
     """``delete`` with caller-supplied bucket ids (the RLU channel layer
     derives the local bucket from one global hash — see rlu.py)."""
+    if hm.config.displacement:
+        return _delete_displaced(hm, keys, b)
     cfg = hm.config
     slots = cfg.slots_per_page
     q = keys.astype(U32)
@@ -493,18 +715,61 @@ def delete_with_buckets(hm: HashMem, keys: jax.Array, b: jax.Array):
     c, s = idx // slots, (idx % slots).astype(I32)
     pg = pages[jnp.arange(qn), c]
     wp = jnp.where(found, pg, cfg.num_pages)                               # OOB drop
-    plane_pages = None
-    if hm.planes is not None and qn > 0:
-        # dedup identical (page, slot) targets (duplicate queries) so the
-        # batched bit-plane scatter adds each bit exactly once
-        flatidx = jnp.where(found, pg * slots + s, -1)
-        o = jnp.argsort(flatidx)
-        fs = flatidx[o]
-        first = jnp.concatenate([jnp.ones((1,), bool), fs[1:] != fs[:-1]])
-        uniq = jnp.zeros((qn,), bool).at[o].set(first)
-        plane_pages = jnp.where(found & uniq, pg, cfg.num_pages)
+    plane_pages = _dedup_plane_pages(hm, found, pg, s)
     store = hm.store.write_keys(wp, s, jnp.full((qn,), TOMBSTONE_KEY, U32),
                                 plane_pages=plane_pages)
+    return HashMem(store=store, bucket_head=hm.bucket_head,
+                   config=cfg), found
+
+
+def _dedup_plane_pages(hm: HashMem, found, pg, s):
+    """Dedup identical (page, slot) tombstone targets (duplicate queries) so
+    the batched bit-plane/fingerprint scatters add each bit exactly once;
+    None when neither packed lane exists (no dedup needed)."""
+    cfg = hm.config
+    qn = found.shape[0]
+    if (hm.planes is None and hm.store.fprints is None) or qn == 0:
+        return None
+    flatidx = jnp.where(found, pg * cfg.slots_per_page + s, -1)
+    o = jnp.argsort(flatidx)
+    fs = flatidx[o]
+    first = jnp.concatenate([jnp.ones((1,), bool), fs[1:] != fs[:-1]])
+    uniq = jnp.zeros((qn,), bool).at[o].set(first)
+    return jnp.where(found & uniq, pg, cfg.num_pages)
+
+
+def _delete_displaced(hm: HashMem, keys: jax.Array, b1: jax.Array):
+    """Tombstone delete over the displaced search order: H1 direct page,
+    H2 chain, then the stash.  Stash hits rewrite the stash key lane to
+    TOMBSTONE (the slot is reclaimed at the next rebuild, like any
+    tombstone); duplicate queries resolve to the same slot."""
+    cfg = hm.config
+    S = cfg.slots_per_page
+    q = keys.astype(U32)
+    pages = resolve_pages_displaced(hm, q, b1.astype(I32))                 # (Q, C)
+    rows = hm.key_pages[jnp.maximum(pages, 0)]
+    match = (rows == q[:, None, None]) & (pages >= 0)[:, :, None]
+    qn, C = pages.shape
+    flat = match.reshape(qn, C * S)
+    st = hm.store
+    if st.stash is not None:
+        flat = jnp.concatenate([flat, st.stash[None, :, 0] == q[:, None]],
+                               axis=1)
+    found = jnp.any(flat, axis=1)
+    idx = jnp.argmax(flat, axis=1)
+    in_pool = idx < C * S
+    pidx = jnp.minimum(idx, C * S - 1)
+    c, s = pidx // S, (pidx % S).astype(I32)
+    pg = pages[jnp.arange(qn), c]
+    pool_hit = found & in_pool
+    wp = jnp.where(pool_hit, pg, cfg.num_pages)                            # OOB drop
+    plane_pages = _dedup_plane_pages(hm, pool_hit, pg, s)
+    store = st.write_keys(wp, s, jnp.full((qn,), TOMBSTONE_KEY, U32),
+                          plane_pages=plane_pages)
+    if st.stash is not None:
+        sp = jnp.where(found & ~in_pool, idx - C * S, st.stash.shape[0])
+        stash = store.stash.at[sp, 0].set(TOMBSTONE_KEY, mode="drop")
+        store = dataclasses.replace(store, stash=stash)
     return HashMem(store=store, bucket_head=hm.bucket_head,
                    config=cfg), found
 
@@ -514,9 +779,14 @@ def delete_with_buckets(hm: HashMem, keys: jax.Array, b: jax.Array):
 # ---------------------------------------------------------------------------
 
 def live_count(hm: HashMem) -> jax.Array:
-    """() int32 number of live (non-empty, non-tombstone) entries."""
+    """() int32 number of live (non-empty, non-tombstone) entries,
+    stash included."""
     kp = hm.key_pages
-    return jnp.sum((kp != EMPTY_KEY) & (kp != TOMBSTONE_KEY)).astype(I32)
+    n = jnp.sum((kp != EMPTY_KEY) & (kp != TOMBSTONE_KEY)).astype(I32)
+    if hm.store.stash is not None:
+        sk = hm.store.stash[:, 0]
+        n = n + jnp.sum((sk != EMPTY_KEY) & (sk != TOMBSTONE_KEY)).astype(I32)
+    return n
 
 
 def load_factor(hm: HashMem) -> jax.Array:
@@ -534,6 +804,8 @@ def _rebuild(hm: HashMem, new_cfg: HashMemConfig,
     probe/delete semantics survive the rebuild.  The interleaved pool makes
     this one reshape: rows flatten to (P*S, 2) key/value pairs directly.
     """
+    if hm.config.displacement:
+        return _rebuild_displaced(hm, new_cfg, bucket_fn)
     flat = hm.store.pool.reshape(-1, 2)
     keys = flat[:, layout.KEY_LANE]
     vals = flat[:, layout.VAL_LANE]
@@ -544,6 +816,49 @@ def _rebuild(hm: HashMem, new_cfg: HashMemConfig,
     else:
         b = bucket_fn(keys, new_cfg)
     return _scatter_build(new_cfg, keys, vals, b, valid=live)
+
+
+def _rebuild_displaced(hm: HashMem, new_cfg: HashMemConfig,
+                       bucket_fn: Optional[BucketFn]) -> HashMem:
+    """Displaced rebuild: replay every live entry through the displaced
+    insert path, oldest placement class first.
+
+    Flat order alone is NOT age order here (a key's H2 chain entries can sit
+    at a lower page id than another key's H1 direct entries), but WITHIN a
+    key all duplicates share (b1, b2), so classifying each slot as
+    was-H1-direct (its page IS its H1 bucket's own row) vs was-chained and
+    replaying class 0, then class 1, then the stash preserves per-key age
+    order — the only order probe/delete semantics depend on.  A compact
+    never drops entries: the replay faces at least the capacity the entries
+    already fit in, and any cascade ends in the (non-decreasing) stash."""
+    cfg = hm.config
+    S = cfg.slots_per_page
+    flat = hm.store.pool.reshape(-1, 2)
+    keys = flat[:, layout.KEY_LANE]
+    vals = flat[:, layout.VAL_LANE]
+    live = (keys != EMPTY_KEY) & (keys != TOMBSTONE_KEY)
+    n = keys.shape[0]
+    if bucket_fn is None:
+        b_old = hash_to_bucket(keys, cfg.num_buckets, cfg.hash_fn, cfg.salt)
+    else:
+        b_old = bucket_fn(keys, cfg)
+    page_of = jnp.arange(n, dtype=I32) // S
+    cls = jnp.where(page_of == b_old, 0, 1)
+    sortkey = jnp.where(live, cls * n + jnp.arange(n), 2 * n + jnp.arange(n))
+    order = jnp.argsort(sortkey)
+    ks, vs, lv = keys[order], vals[order], live[order]
+    if hm.store.stash is not None:
+        sk, sv = hm.store.stash[:, 0], hm.store.stash[:, 1]
+        ks = jnp.concatenate([ks, sk])
+        vs = jnp.concatenate([vs, sv])
+        lv = jnp.concatenate([lv, (sk != EMPTY_KEY) & (sk != TOMBSTONE_KEY)])
+    if bucket_fn is None:
+        b1 = hash_to_bucket(ks, new_cfg.num_buckets, new_cfg.hash_fn,
+                            new_cfg.salt)
+    else:
+        b1 = bucket_fn(ks, new_cfg)
+    hm2, _ = _insert_displaced(create(new_cfg), ks, vs, b1, valid=lv)
+    return hm2
 
 
 def grow(hm: HashMem, factor: Optional[int] = None,
@@ -638,14 +953,24 @@ def stats(hm: HashMem) -> dict:
     live = (kp != np.uint32(0xFFFFFFFF)) & (kp != np.uint32(0xFFFFFFFE))
     chain_len = np.asarray(chain_lengths(hm))
     cap = cfg.num_pages * cfg.slots_per_page
+    stash_live = stash_tomb = stash_fill = 0
+    if hm.store.stash is not None:
+        sk = np.asarray(hm.store.stash[:, 0])
+        stash_live = int(((sk != np.uint32(0xFFFFFFFF))
+                          & (sk != np.uint32(0xFFFFFFFE))).sum())
+        stash_tomb = int((sk == np.uint32(0xFFFFFFFE)).sum())
+        stash_fill = int(np.asarray(hm.store.stash_fill))
     return {
-        "live_entries": int(live.sum()),
-        "tombstones": int((kp == np.uint32(0xFFFFFFFE)).sum()),
+        "live_entries": int(live.sum()) + stash_live,
+        "tombstones": int((kp == np.uint32(0xFFFFFFFE)).sum()) + stash_tomb,
         "pages_used": int(np.sum(fill > 0)),
         "free_pages": int(cfg.num_pages - np.asarray(hm.free_top)),
         "chain_lengths": chain_len,
         "max_chain": int(chain_len.max(initial=0)),
         "capacity": cap,
-        "load_factor": float(live.sum() / cap),
+        "load_factor": float((live.sum() + stash_live) / cap),
         "num_buckets": cfg.num_buckets,
+        "stash_live": stash_live,
+        "stash_tombstones": stash_tomb,
+        "stash_fill": stash_fill,
     }

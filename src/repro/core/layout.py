@@ -1,5 +1,5 @@
-"""Unified PageStore: interleaved bucket-row layout + bit-plane packing
-(paper §2, §2.2, §2.4).
+"""Unified PageStore: interleaved bucket-row layout, bit-plane packing,
+fingerprint lane and stash (paper §2, §2.2, §2.4; Dash/IcebergHT).
 
 The HashMem pool mirrors the paper's DRAM organization, where ONE row
 activation exposes an entire bucket segment — keys *and* values — to the
@@ -24,6 +24,22 @@ subarray compare units:
     values").  ``pack_bitplanes`` produces that layout: plane j, word w holds
     bit j of keys at slots [32w, 32w+32).  A b-bit probe is then b bitwise
     vector ops over int32 lane words — element-parallel, bit-serial.
+  * **Fingerprint lane** (``fp_bits > 0``, Dash §4): ``fprints`` holds the
+    low ``fp_bits`` of an independent hash of each slot's key, packed with
+    the SAME bit-plane machinery as ``planes`` — ``(num_pages, fp_bits,
+    slots//32)``.  A probe scans this narrow lane first (fp_bits bitwise
+    ops instead of a full row fetch) and activates the wide ``(slots, 2)``
+    row only for pages holding a fingerprint match, dropping rows activated
+    per probe toward 1 under skew.  ``write_slots``/``write_keys`` keep it
+    in sync automatically; the invariant is
+    ``unpack_bitplanes(fprints, fp_bits) == fingerprint(key_pages, fp_bits)``
+    (EMPTY and TOMBSTONE sentinels are fingerprinted like any key — a probe
+    for a user key simply never matches their fingerprints except as a
+    bounded false positive, rejected by the full row compare).
+  * **Stash** (``stash_slots > 0``, IcebergHT §3): a tiny ``(stash_slots,
+    2)`` register-file of key/value pairs absorbing inserts that neither
+    bucket choice could place.  It is deliberately NOT page-backed: probes
+    compare it whole, in-register, with zero row activations.
 """
 from __future__ import annotations
 
@@ -35,7 +51,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.hashing import EMPTY_KEY
+from repro.core.hashing import EMPTY_KEY, fingerprint
 
 U32 = jnp.uint32
 I32 = jnp.int32
@@ -49,8 +65,9 @@ VAL_LANE = 1
 # ---------------------------------------------------------------------------
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["pool", "planes", "page_next", "page_fill", "free_top"],
-         meta_fields=["key_bits"])
+         data_fields=["pool", "planes", "page_next", "page_fill", "free_top",
+                      "fprints", "stash", "stash_fill"],
+         meta_fields=["key_bits", "fp_bits"])
 @dataclass
 class PageStore:
     """Interleaved page pool + per-page bookkeeping (one pytree).
@@ -58,7 +75,8 @@ class PageStore:
     ``pool[p, s, KEY_LANE]`` is the key at slot s of page p and
     ``pool[p, s, VAL_LANE]`` its value — one row activation serves both.
     All mutations flow through ``write_slots`` (fused key+value scatter,
-    keeping the bit-planes in sync) or the dedicated tombstone/link helpers.
+    keeping the bit-planes AND the fingerprint lane in sync) or the
+    dedicated tombstone/link helpers.
     """
 
     pool: jax.Array               # (num_pages, slots, 2) uint32
@@ -67,6 +85,10 @@ class PageStore:
     page_fill: jax.Array          # (num_pages,) int32 fill high-water mark
     free_top: jax.Array           # () int32 pim_malloc bump pointer
     key_bits: int                 # static: width of the bit-plane scan
+    fprints: Optional[jax.Array] = None   # (num_pages, fp_bits, slots//32)
+    stash: Optional[jax.Array] = None     # (stash_slots, 2) uint32 | None
+    stash_fill: Optional[jax.Array] = None  # () int32 bump pointer | None
+    fp_bits: int = 0              # static: fingerprint width (0 = lane off)
 
     # -- thin split views (external callers / differential harness) --------
     @property
@@ -98,7 +120,13 @@ class PageStore:
         if planes is not None:
             planes = update_bitplanes_batch(planes, pages, slots_idx,
                                             keys.astype(U32), self.key_bits)
-        return dataclasses.replace(self, pool=pool, planes=planes)
+        fprints = self.fprints
+        if fprints is not None:
+            fprints = update_bitplanes_batch(
+                fprints, pages, slots_idx,
+                fingerprint(keys.astype(U32), self.fp_bits), self.fp_bits)
+        return dataclasses.replace(self, pool=pool, planes=planes,
+                                   fprints=fprints)
 
     def write_keys(self, pages, slots_idx, keys,
                    plane_pages=None) -> "PageStore":
@@ -108,19 +136,39 @@ class PageStore:
         targets there)."""
         pool = self.pool.at[pages, slots_idx, KEY_LANE].set(
             keys.astype(U32), mode="drop")
+        pp = pages if plane_pages is None else plane_pages
         planes = self.planes
         if planes is not None:
-            pp = pages if plane_pages is None else plane_pages
             planes = update_bitplanes_batch(planes, pp, slots_idx,
                                             keys.astype(U32), self.key_bits)
-        return dataclasses.replace(self, pool=pool, planes=planes)
+        fprints = self.fprints
+        if fprints is not None:
+            fprints = update_bitplanes_batch(
+                fprints, pp, slots_idx,
+                fingerprint(keys.astype(U32), self.fp_bits), self.fp_bits)
+        return dataclasses.replace(self, pool=pool, planes=planes,
+                                   fprints=fprints)
 
 def empty_store(num_pages: int, slots: int, key_bits: int = 32,
-                with_planes: bool = False) -> PageStore:
-    """Fresh PageStore: every key EMPTY, every value 0, no chains."""
+                with_planes: bool = False, fp_bits: int = 0,
+                stash_slots: int = 0) -> PageStore:
+    """Fresh PageStore: every key EMPTY, every value 0, no chains.
+
+    ``fp_bits > 0`` allocates the fingerprint lane (initialized to the
+    fingerprint of EMPTY_KEY in every slot, matching the pool);
+    ``stash_slots > 0`` allocates the stash (keys EMPTY, fill 0)."""
     pool = empty_pool(num_pages, slots)
     planes = pack_bitplanes(pool[..., KEY_LANE], key_bits) if with_planes \
         else None
+    fprints = None
+    if fp_bits > 0:
+        fprints = pack_bitplanes(
+            fingerprint(pool[..., KEY_LANE], fp_bits), fp_bits)
+    stash = stash_fill = None
+    if stash_slots > 0:
+        stash = jnp.broadcast_to(jnp.array([EMPTY_KEY, 0], dtype=U32),
+                                 (stash_slots, 2))
+        stash_fill = jnp.asarray(0, dtype=I32)
     return PageStore(
         pool=pool,
         planes=planes,
@@ -128,6 +176,10 @@ def empty_store(num_pages: int, slots: int, key_bits: int = 32,
         page_fill=jnp.zeros((num_pages,), dtype=I32),
         free_top=jnp.asarray(0, dtype=I32),
         key_bits=key_bits,
+        fprints=fprints,
+        stash=stash,
+        stash_fill=stash_fill,
+        fp_bits=fp_bits,
     )
 
 

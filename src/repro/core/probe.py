@@ -2,7 +2,14 @@
 
 Every backend consumes the unified PageStore's interleaved (P, S, 2) pool:
 one activated row per chain step carries the keys to compare AND the value
-to return (paper §2.2/§2.4 row-buffer semantics)."""
+to return (paper §2.2/§2.4 row-buffer semantics).
+
+The (Q, C) page schedule may contain -1 holes ANYWHERE, not just as tail
+padding: the fingerprint pre-pass (hashmap._fp_filter) blanks pages whose
+fingerprint lane holds no match, and the displaced resolve blanks the H2
+chain head when it aliases the H1 direct page.  The Pallas backends turn
+interior holes into row-buffer hits via the forward-filled fetch index
+(kernels/ref.fill_fetch_pages); the ref oracle simply masks them."""
 from __future__ import annotations
 
 from repro.kernels import ops

@@ -45,7 +45,6 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import HashMemConfig
 from repro.core import hashmap
 from repro.core.hashing import EMPTY_KEY, HASH_FNS
-from repro.core.probe import probe_pages
 from repro.core.compat import shard_map
 
 U32 = jnp.uint32
@@ -202,8 +201,11 @@ def _local_probe(hm_local, queries, cfg: HashMemConfig, num_shards: int,
                  shard_by: str = "mod"):
     _, local_bucket = owner_and_local_bucket(queries, cfg, num_shards,
                                              shard_by)
-    pages = hashmap.resolve_pages_by_bucket(hm_local, local_bucket)
-    return probe_pages(hm_local, queries.astype(U32), pages, backend=cfg.backend)
+    # full probe pipeline per shard: displaced resolve + fingerprint filter
+    # + backend + stash, so the fused tick_mesh megakernel (which runs this
+    # inside its single shard_map) probes fingerprints and the stash
+    # in-kernel too
+    return hashmap.probe_with_buckets(hm_local, queries, local_bucket)
 
 
 class _Route:

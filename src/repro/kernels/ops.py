@@ -2,9 +2,11 @@
 
 All probe entry points take the unified PageStore's interleaved (P, S, 2)
 pool — one page fetch per chain step serves both the key compare and the
-value readout.  ``interpret`` defaults to True off-TPU (this container
-validates the kernel bodies in interpret mode; on a real v5e the same calls
-lower to Mosaic).
+value readout.  Page schedules may carry interior -1 holes (fingerprint-
+filtered pages); the Pallas wrappers derive a forward-filled fetch index so
+those steps cost no row activation.  ``interpret`` defaults to True off-TPU
+(this container validates the kernel bodies in interpret mode; on a real
+v5e the same calls lower to Mosaic).
 """
 from __future__ import annotations
 

@@ -34,7 +34,9 @@ LINE = 128
 
 
 def _make_kernel(key_bits: int):
-    def _kernel(pages_ref, queries_ref, planes_ref, pool_ref, out_ref):
+    def _kernel(pages_ref, fetch_ref, queries_ref, planes_ref, pool_ref,
+                out_ref):
+        del fetch_ref   # consumed by the BlockSpec index maps only
         c = pl.program_id(1)
         q = pl.program_id(0)
 
@@ -91,20 +93,27 @@ def probe_pages_bitserial(planes, pool, queries, pages, key_bits: int,
     S = pool.shape[1]
     assert S == W * 32
 
+    from repro.kernels.ref import fill_fetch_pages
+    pages = pages.astype(jnp.int32)
+    fetch = fill_fetch_pages(pages)   # filtered steps re-open the resident row
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(qn, C),
         in_specs=[
-            pl.BlockSpec((1, b, W), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0, 0)),
+            pl.BlockSpec((1, b, W),
+                         lambda q, c, pages, fetch, queries: (fetch[q, c], 0, 0)),
             # value lane only: block index 1 in the size-1 trailing dim
-            pl.BlockSpec((1, S, 1), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0, 1)),
+            pl.BlockSpec((1, S, 1),
+                         lambda q, c, pages, fetch, queries: (fetch[q, c], 0, 1)),
         ],
-        out_specs=pl.BlockSpec((1, LINE), lambda q, c, pages, queries: (q, 0)),
+        out_specs=pl.BlockSpec((1, LINE),
+                               lambda q, c, pages, fetch, queries: (q, 0)),
     )
     out = pl.pallas_call(
         _make_kernel(key_bits),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((qn, LINE), U32),
         interpret=interpret,
-    )(pages.astype(jnp.int32), queries.astype(U32), planes, pool)
+    )(pages, fetch, queries.astype(U32), planes, pool)
     return out[:, 0], out[:, 1] > 0

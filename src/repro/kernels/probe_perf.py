@@ -31,7 +31,8 @@ U32 = jnp.uint32
 LINE = 128  # output cache line width (lanes)
 
 
-def _kernel(pages_ref, queries_ref, pool_ref, out_ref):
+def _kernel(pages_ref, fetch_ref, queries_ref, pool_ref, out_ref):
+    del fetch_ref   # consumed by the BlockSpec index maps only
     c = pl.program_id(1)
     q = pl.program_id(0)
 
@@ -68,22 +69,30 @@ def probe_pages_perf(pool, queries, pages, *, interpret=None):
     (P, S, 2) page pool; see module docstring."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    from repro.kernels.ref import fill_fetch_pages
     qn, C = pages.shape
     P, S, _ = pool.shape
+    pages = pages.astype(jnp.int32)
+    # forward-filled fetch schedule: a filtered (-1) step repeats the last
+    # block index, so Pallas keeps the row resident instead of re-fetching
+    # (zero extra row activations; see ref.fill_fetch_pages)
+    fetch = fill_fetch_pages(pages)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,       # pages, queries
+        num_scalar_prefetch=3,       # pages, fetch, queries
         grid=(qn, C),
         in_specs=[
             # ONE row activation: keys AND values in a single page fetch
-            pl.BlockSpec((1, S, 2), lambda q, c, pages, queries: (jnp.maximum(pages[q, c], 0), 0, 0)),
+            pl.BlockSpec((1, S, 2),
+                         lambda q, c, pages, fetch, queries: (fetch[q, c], 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, LINE), lambda q, c, pages, queries: (q, 0)),
+        out_specs=pl.BlockSpec((1, LINE),
+                               lambda q, c, pages, fetch, queries: (q, 0)),
     )
     out = pl.pallas_call(
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((qn, LINE), U32),
         interpret=interpret,
-    )(pages.astype(jnp.int32), queries.astype(U32), pool)
+    )(pages, fetch, queries.astype(U32), pool)
     return out[:, 0], out[:, 1] > 0

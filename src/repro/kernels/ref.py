@@ -13,9 +13,29 @@ match because user keys are constrained below them.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 U32 = jnp.uint32
+I32 = jnp.int32
+
+
+def fill_fetch_pages(pages):
+    """Forward-fill the -1 holes of a (Q, C) page schedule with the last
+    preceding real page id (leading holes fall back to page 0).
+
+    This is the BlockSpec FETCH index for the Pallas kernels.  Pallas skips
+    the block copy when the index map returns the same block for consecutive
+    grid steps, so a fingerprint-filtered (-1) schedule entry re-"opens" the
+    already-resident row instead of activating a new one — the DRAM open-row
+    analogue of the paper's row-buffer hit.  Validity still comes from the
+    real schedule: the kernel masks its compare with ``pages[q, c] >= 0``,
+    so the stale resident row never produces a match."""
+    C = pages.shape[1]
+    pos = jnp.where(pages >= 0, jnp.arange(C, dtype=I32)[None, :], -1)
+    last = jax.lax.cummax(pos, axis=1)
+    filled = jnp.take_along_axis(pages, jnp.maximum(last, 0), axis=1)
+    return jnp.where(last >= 0, filled, 0).astype(I32)
 
 
 def probe_pages_ref(pool, queries, pages):

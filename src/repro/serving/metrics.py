@@ -61,6 +61,7 @@ class MetricsCollector:
         self.chain_sample_every = chain_sample_every
         self._ticks_since_chain_sample = 0
         self.chain_samples: list[dict] = []
+        self.rows_activated: list[float] = []
 
     # -- recording ---------------------------------------------------------
     def record_request(self, ticks: int, seconds: float):
@@ -103,9 +104,17 @@ class MetricsCollector:
             "tick": len(self.tick_ops),
             "mean_chain": float(cl.mean()),
             "max_chain": int(cl.max(initial=0)),
+            "chain_p50": percentile(cl, 50),
+            "chain_p99": percentile(cl, 99),
             "max_chain_per_shard": [int(c.max(initial=0)) for c in cls],
             "buckets": int(cl.shape[0]),
         })
+
+    def record_rows_activated(self, mean_rows: float):
+        """Per-sample mean DRAM-row activations per probe, from
+        ``hashmap.rows_activated_per_probe`` on a sampled tick's probe keys
+        (the engine throttles this alongside ``sample_chains``)."""
+        self.rows_activated.append(finite(mean_rows))
 
     # -- reduction ---------------------------------------------------------
     def snapshot(self) -> dict:
@@ -141,6 +150,18 @@ class MetricsCollector:
             "probe_hit_rate": finite(self.hits / self.probes)
             if self.probes else 0.0,
             "chain_telemetry": self.chain_samples[-8:],
+            "chain_depth": {
+                "p50": self.chain_samples[-1]["chain_p50"]
+                if self.chain_samples else 0.0,
+                "p99": self.chain_samples[-1]["chain_p99"]
+                if self.chain_samples else 0.0,
+            },
+            "rows_activated": {
+                "p50": percentile(self.rows_activated, 50),
+                "p99": percentile(self.rows_activated, 99),
+                "mean": finite(np.mean(self.rows_activated))
+                if self.rows_activated else 0.0,
+            },
         }
 
     def to_json(self, **extra) -> str:

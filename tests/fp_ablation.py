@@ -1,0 +1,125 @@
+"""Fingerprint-ablation smoke for `make ci` (also importable by tests).
+
+Fingerprints are a pure page FILTER: they may only skip pages whose key
+lane cannot contain the query, never change which slot a probe resolves
+to.  So for any op schedule, a table built with ``fingerprint_bits > 0``
+must be bit-equal — probe values, found masks, insert oks, delete founds —
+to the same schedule on a table with fingerprints off, and both must match
+the duplicate-aware DictModel oracle (tests/model.py).
+
+``fp_smoke()`` runs mixed insert/probe/delete/grow churn schedules over
+the (plain, displaced+stash) x (ref, perf) grid.  Displaced configs use
+slots_per_page=32: the fingerprint lane rides the bit-plane packer, which
+requires slot counts in multiples of 32.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import HashMemConfig
+from repro.core import hashmap
+
+from model import DictModel
+
+
+def _cfg(backend: str, fp_bits: int, displacement: bool) -> HashMemConfig:
+    return HashMemConfig(num_buckets=16, slots_per_page=32,
+                         overflow_pages=64, max_chain=4, backend=backend,
+                         fingerprint_bits=fp_bits,
+                         displacement=displacement,
+                         stash_slots=32 if displacement else 0,
+                         auto_grow=False)
+
+
+def _schedule(seed: int, rounds: int = 6, batch: int = 48):
+    """Mixed churn: each round inserts fresh keys, probes a blend of live +
+    missing keys, deletes ~a third of the live set, and round 3 doubles the
+    table (grow) so the rebuild path is in the ablation too."""
+    rng = np.random.default_rng(seed)
+    pool = rng.choice(100_000, rounds * batch, replace=False) \
+        .astype(np.uint32)
+    live: list[int] = []
+    sched = []
+    for r in range(rounds):
+        ks = pool[r * batch:(r + 1) * batch]
+        sched.append(("insert", ks, ks * np.uint32(3) + np.uint32(1)))
+        qs = np.concatenate([
+            rng.choice(np.asarray(live + list(ks), np.uint32), batch),
+            rng.choice(2**31, 8).astype(np.uint32) + np.uint32(2**31 - 2),
+        ])
+        sched.append(("probe", qs, None))
+        live.extend(int(k) for k in ks)
+        dead = rng.choice(len(live), len(live) // 3, replace=False)
+        dk = np.asarray(live, np.uint32)[dead]
+        sched.append(("delete", dk, None))
+        gone = set(int(k) for k in dk)
+        live = [k for k in live if k not in gone]
+        if r == 2:
+            sched.append(("grow", None, None))
+        sched.append(("probe", np.asarray(live[-batch:] or [1],
+                                          np.uint32), None))
+    return sched
+
+
+def _run(cfg: HashMemConfig, sched) -> list:
+    hm = hashmap.create(cfg)
+    out = []
+    for kind, ks, vs in sched:
+        if kind == "grow":
+            hm = hashmap.grow(hm)
+            continue
+        k = jnp.asarray(ks)
+        if kind == "insert":
+            hm, ok = hashmap.insert(hm, k, jnp.asarray(vs))
+            out.append(("insert", np.asarray(ok).tolist()))
+        elif kind == "delete":
+            hm, f = hashmap.delete(hm, k)
+            out.append(("delete", np.asarray(f).tolist()))
+        else:
+            v, f = hashmap.probe(hm, k)
+            out.append(("probe", np.asarray(v).tolist(),
+                        np.asarray(f).tolist()))
+    return out
+
+
+def _model_run(sched) -> list:
+    m = DictModel()
+    out = []
+    for kind, ks, vs in sched:
+        if kind == "grow":
+            continue
+        if kind == "insert":
+            ok = [True] * len(ks)          # ample arena: nothing refused
+            m.insert(ks, vs, ok)
+            out.append(("insert", ok))
+        elif kind == "delete":
+            out.append(("delete", [bool(b) for b in m.delete(ks)]))
+        else:
+            v, f = m.probe(ks)
+            out.append(("probe", [int(x) for x in v],
+                        [bool(b) for b in f]))
+    return out
+
+
+def fp_smoke(seeds=(0, 1)) -> None:
+    for seed in seeds:
+        sched = _schedule(seed)
+        for displacement in (False, True):
+            for backend in ("ref", "perf"):
+                off = _run(_cfg(backend, 0, displacement), sched)
+                on = _run(_cfg(backend, 10, displacement), sched)
+                assert on == off, (
+                    f"fingerprint ablation diverged: seed={seed} "
+                    f"backend={backend} displacement={displacement}")
+                oracle = _model_run(sched)
+                assert on == oracle, (
+                    f"fp-on run diverged from DictModel: seed={seed} "
+                    f"backend={backend} displacement={displacement}")
+        print(f"fp-smoke seed {seed}: "
+              "fp on == fp off == DictModel (ref+perf, plain+displaced)")
+    print("fp-smoke OK")
+
+
+if __name__ == "__main__":
+    fp_smoke()

@@ -77,6 +77,52 @@ class DictModel:
 
 
 # ---------------------------------------------------------------------------
+# Adversarial key mining (numpy mirror of repro.core.hashing) — keys that
+# collide on the FIRST bucket choice, and optionally on the SECOND too, so
+# displacement tests can force H2 relocation or defeat it into the stash.
+# ---------------------------------------------------------------------------
+
+MURMUR_SALT = 0x9E3779B9
+B2_SALT = 0x68E31DA4          # keep in sync with repro.core.hashing
+
+
+def murmur3_fmix_np(keys, salt: int = MURMUR_SALT):
+    """numpy mirror of hashing.murmur3_fmix (uint32 wraparound arithmetic)."""
+    import numpy as np
+    h = np.asarray(keys, np.uint32) ^ np.uint32(salt)
+    h = h ^ (h >> np.uint32(16))
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> np.uint32(13))
+    h = h * np.uint32(0xC2B2AE35)
+    h = h ^ (h >> np.uint32(16))
+    return h
+
+
+def mine_bucket_colliding_keys(n: int, num_buckets: int,
+                               same_b2: bool = True,
+                               salt: int = MURMUR_SALT):
+    """Mine ``n`` distinct user keys sharing the H1 bucket under the default
+    murmur3_fmix hash; with ``same_b2`` each key's H2 equals its H1 (one
+    shared bucket for BOTH choices), so H2 relocation is useless and
+    inserts past the chain bound land in the stash.  With ``same_b2=False``
+    every mined key has H2 != H1, guaranteeing displacement genuinely
+    relocates."""
+    import numpy as np
+    # at density 1/B (or 1/B^2 for the b1==b2==b case) this is orders of
+    # magnitude more candidates than needed for the small test tables
+    cand = np.arange(1, 1 + max(1 << 16, 64 * n * num_buckets * num_buckets),
+                     dtype=np.uint32)
+    b1 = murmur3_fmix_np(cand, salt) % np.uint32(num_buckets)
+    b2 = murmur3_fmix_np(cand, (salt ^ B2_SALT) & 0xFFFFFFFF) \
+        % np.uint32(num_buckets)
+    ok = (b1 == b2) if same_b2 else (b1 != b2)
+    vals, counts = np.unique(b1[ok], return_counts=True)
+    keys = cand[ok & (b1 == vals[counts.argmax()])][:n]
+    assert len(keys) == n, f"mined only {len(keys)}/{n} colliding keys"
+    return keys
+
+
+# ---------------------------------------------------------------------------
 # ServingEngine differential harness (shared by the in-process tests and the
 # multi-device subprocess tests — keep this module import-light)
 # ---------------------------------------------------------------------------

@@ -31,7 +31,14 @@ from repro.serving import Request, ServingEngine
 from model import DictModel, make_engine_schedule, replay_schedule_against_model
 
 
-def _cfg(auto_grow: bool = True) -> HashMemConfig:
+def _cfg(auto_grow: bool = True, displaced: bool = False) -> HashMemConfig:
+    if displaced:
+        # fingerprint lane rides the bit-plane packer: slots must be a
+        # multiple of 32, hence the wider pages here
+        return HashMemConfig(num_buckets=16, slots_per_page=32,
+                             overflow_pages=32, max_chain=4, backend="ref",
+                             auto_grow=auto_grow, displacement=True,
+                             fingerprint_bits=8, stash_slots=32)
     return HashMemConfig(num_buckets=16, slots_per_page=8, overflow_pages=32,
                          max_chain=4, backend="ref", auto_grow=auto_grow)
 
@@ -51,14 +58,26 @@ def run_streams(streams, *, cfg, mesh=None, num_shards=2, coalesce=True,
     return eng, [r.results for r in reqs]
 
 
+def _shard_live_keys(hm) -> np.ndarray:
+    """All live user keys on one shard — chain pages plus (when the config
+    enables displacement) the stash lane."""
+    kp = np.asarray(hm.key_pages).reshape(-1)
+    live = kp[(kp != np.uint32(0xFFFFFFFF)) & (kp != np.uint32(0xFFFFFFFE))]
+    if hm.store.stash is not None:
+        sk = np.asarray(hm.store.stash)[:, 0]
+        live = np.concatenate(
+            [live, sk[(sk != np.uint32(0xFFFFFFFF)) &
+                      (sk != np.uint32(0xFFFFFFFE))]])
+    return live
+
+
 def check_shard_state(eng, model):
     """Per-shard invariants: live entries sum to the model population and
     every live key lives on the shard the router assigns it to."""
     shards = eng.shards
     total = 0
     for s, hm in enumerate(shards):
-        kp = np.asarray(hm.key_pages).reshape(-1)
-        live = kp[(kp != np.uint32(0xFFFFFFFF)) & (kp != np.uint32(0xFFFFFFFE))]
+        live = _shard_live_keys(hm)
         total += live.size
         if eng.backend.is_mesh and live.size:
             owners = rlu.owner_of_np(live, eng.backend.cfg, eng.num_shards,
@@ -69,7 +88,7 @@ def check_shard_state(eng, model):
 
 
 def one_schedule(seed: int, mesh, depths=(2,), per_request: bool = False,
-                 zipf_theta: float = 0.0):
+                 zipf_theta: float = 0.0, displaced: bool = False):
     streams = make_engine_schedule(seed, n_requests=16, ops_per_request=3,
                                    keyspace=48, zipf_theta=zipf_theta)
     rng = np.random.default_rng(seed)
@@ -77,8 +96,8 @@ def one_schedule(seed: int, mesh, depths=(2,), per_request: bool = False,
     pv = rng.integers(1, 2**30, 16).astype(np.uint32)
     preload = (pk, pv)
 
-    host, ref = run_streams(streams, cfg=_cfg(), num_shards=2,
-                            preload=preload)
+    host, ref = run_streams(streams, cfg=_cfg(displaced=displaced),
+                            num_shards=2, preload=preload)
     model = replay_schedule_against_model(host.schedule, _seeded_model(pk, pv))
     check_shard_state(host, model)
 
@@ -92,7 +111,8 @@ def one_schedule(seed: int, mesh, depths=(2,), per_request: bool = False,
     if per_request:
         runs["mesh_per_request"] = dict(mesh=mesh, coalesce=False)
     for name, kw in runs.items():
-        eng, results = run_streams(streams, cfg=_cfg(), preload=preload, **kw)
+        eng, results = run_streams(streams, cfg=_cfg(displaced=displaced),
+                                   preload=preload, **kw)
         assert results == ref, \
             (name, seed, [d for d in zip(ref, results) if d[0] != d[1]][:1])
         m = replay_schedule_against_model(eng.schedule, _seeded_model(pk, pv))
@@ -114,16 +134,17 @@ def _seeded_model(pk, pv):
 
 
 def sweep(seed0: int, n: int, depths=(2,), zipfian: str = "mixed",
-          per_request_every: int = 8):
+          per_request_every: int = 8, displaced: bool = False):
     """zipfian: "none" (uniform keys), "all" (every schedule contended),
-    or "mixed" (alternate)."""
+    or "mixed" (alternate).  ``displaced`` runs every schedule on the
+    fingerprint+displacement+stash config instead of the plain one."""
     mesh = make_serving_mesh()     # all forced devices
     for i in range(n):
         seed = seed0 + i
         hot = {"none": False, "all": True, "mixed": bool(i % 2)}[zipfian]
         one_schedule(seed, mesh, depths=depths,
                      per_request=(i % per_request_every == 0),
-                     zipf_theta=0.99 if hot else 0.0)
+                     zipf_theta=0.99 if hot else 0.0, displaced=displaced)
     print(f"SWEEP OK {n} schedules (seeds {seed0}..{seed0 + n - 1})")
 
 

@@ -36,13 +36,23 @@ def _cfg(backend: str) -> HashMemConfig:
                          max_chain=4, backend=backend, auto_grow=False)
 
 
+def _dcfg(backend: str) -> HashMemConfig:
+    """Displaced variant: fingerprint lane + H2 displacement + stash (the
+    PR-7 probe path).  Same arena shape as _cfg so the sweep reuses the
+    compiled probe shapes."""
+    return HashMemConfig(num_buckets=8, slots_per_page=32, overflow_pages=24,
+                         max_chain=4, backend=backend, auto_grow=False,
+                         displacement=True, fingerprint_bits=8,
+                         stash_slots=16)
+
+
 class DiffHarness:
     """One schedule: two live structures + the dict model, op by op."""
 
-    def __init__(self, seed: int):
+    def __init__(self, seed: int, cfg_fn=_cfg):
         self.rng = np.random.default_rng(seed)
-        self.hm_plain = hashmap.create(_cfg("perf"))
-        self.hm_bits = hashmap.create(_cfg("bitserial"))
+        self.hm_plain = hashmap.create(cfg_fn("perf"))
+        self.hm_bits = hashmap.create(cfg_fn("bitserial"))
         self.model = DictModel()
         self.keyspace = self.rng.choice(
             100_000, 256, replace=False).astype(np.uint32)
@@ -135,8 +145,8 @@ OP_NAMES = np.array(["insert", "probe", "delete", "grow", "compact"])
 OP_WEIGHTS = np.array([0.40, 0.25, 0.20, 0.08, 0.07])
 
 
-def run_schedule(seed: int, n_ops: int):
-    h = DiffHarness(seed)
+def run_schedule(seed: int, n_ops: int, cfg_fn=_cfg):
+    h = DiffHarness(seed, cfg_fn)
     ops = h.rng.choice(OP_NAMES, n_ops, p=OP_WEIGHTS)
     for op in ops:
         getattr(h, f"op_{op}")()
@@ -168,6 +178,14 @@ def test_diff_schedule_sweep_500(block):
 def test_diff_schedule_long(seed):
     """>1k-op schedules (slow marker per tests/conftest.py)."""
     run_schedule(seed, n_ops=1200)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_diff_schedule_displaced(seed):
+    """The randomized sweep on the fingerprint+displacement+stash config:
+    same model, same four-backend probe checks, with H2 relocation and the
+    stash live through grow/compact rebuilds."""
+    run_schedule(seed, n_ops=12, cfg_fn=_dcfg)
 
 
 # ---------------------------------------------------------------------------
@@ -337,6 +355,98 @@ def test_grow_preserves_probe_on_all_backends():
         v, f = hashmap.probe(hm, jnp.asarray(keys))
         assert bool(jnp.all(f)), backend
         assert bool(jnp.all(v == jnp.asarray(keys + 7))), backend
+
+
+def _probe_all_backends(hm, q, expv, expf):
+    """Bit-check a probe across all four backends on one (bitserial-built,
+    so planes exist) structure."""
+    for b in ("ref", "perf", "area", "bitserial"):
+        v, f = hashmap.probe(hm, jnp.asarray(q), backend=b)
+        v, f = np.asarray(v), np.asarray(f)
+        assert (f == expf).all(), f"{b}: found mask diverged"
+        assert (v[expf] == expv[expf]).all(), f"{b}: values diverged"
+
+
+def test_one_bucket_displacement_into_stash():
+    """Adversarial all-keys-one-bucket schedule: every key's H1 AND H2 hash
+    to the same bucket (mined in tests/model.py), so H2 relocation is
+    useless — inserts fill the direct page, the one allowed overflow page
+    (max_chain=2), and spill into the stash.  insert -> probe -> delete ->
+    grow with stash entries live, bit-checked across all four backends."""
+    from model import mine_bucket_colliding_keys
+    cfg = HashMemConfig(num_buckets=8, slots_per_page=32, overflow_pages=8,
+                        max_chain=2, backend="bitserial", auto_grow=False,
+                        displacement=True, fingerprint_bits=8,
+                        stash_slots=16)
+    keys = mine_bucket_colliding_keys(72, cfg.num_buckets, same_b2=True)
+    vals = keys * np.uint32(2) + np.uint32(1)
+    hm = hashmap.create(cfg)
+    hm, ok = hashmap.insert(hm, jnp.asarray(keys), jnp.asarray(vals))
+    assert bool(jnp.all(ok))
+    st = hashmap.stats(hm)
+    # 32 direct + 32 chained + 8 stash, in insert order (FIFO classes)
+    assert st["stash_live"] == 8
+    assert st["live_entries"] == 72
+    assert st["max_chain"] <= cfg.max_chain
+    _probe_all_backends(hm, keys, vals, np.ones(72, bool))
+
+    # delete across all three classes: direct, chained, and stash keys
+    dk = np.concatenate([keys[30:34], keys[64:68]])
+    hm, f = hashmap.delete(hm, jnp.asarray(dk))
+    assert bool(jnp.all(f))
+    st = hashmap.stats(hm)
+    assert st["stash_live"] == 4 and st["stash_tombstones"] == 4
+    assert st["live_entries"] == 64
+    alive = np.ones(72, bool)
+    alive[30:34] = alive[64:68] = False
+    _probe_all_backends(hm, keys, vals, alive)
+
+    # grow with stash entries live: the rebuild must replay them (oldest
+    # class order) and reclaim every tombstone
+    hm = hashmap.grow(hm)
+    st = hashmap.stats(hm)
+    assert st["live_entries"] == 64 and st["tombstones"] == 0
+    assert hm.config.num_buckets == 2 * cfg.num_buckets
+    _probe_all_backends(hm, keys, vals, alive)
+    decoded = layout.unpack_bitplanes(hm.planes, hm.config.key_bits)
+    assert bool(jnp.all(decoded == hm.key_pages)), \
+        "bit-planes out of sync after displaced rebuild"
+
+
+def test_displacement_relocates_instead_of_chaining():
+    """Same H1 bucket but every key's H2 differs from H1: the overflow past
+    the direct page must relocate to the H2 direct pages — NO overflow page
+    allocation, NO stash occupancy (the Dash/IcebergHT win the rows-
+    activated bench measures)."""
+    from model import mine_bucket_colliding_keys
+    cfg = HashMemConfig(num_buckets=8, slots_per_page=32, overflow_pages=8,
+                        max_chain=2, backend="bitserial", auto_grow=False,
+                        displacement=True, fingerprint_bits=8,
+                        stash_slots=16)
+    keys = mine_bucket_colliding_keys(40, cfg.num_buckets, same_b2=False)
+    vals = keys + np.uint32(5)
+    hm = hashmap.create(cfg)
+    hm, ok = hashmap.insert(hm, jnp.asarray(keys), jnp.asarray(vals))
+    assert bool(jnp.all(ok))
+    st = hashmap.stats(hm)
+    assert st["stash_live"] == 0
+    # free_top untouched: all 40 landed in direct pages (H1 or H2)
+    assert int(np.asarray(hm.free_top)) == cfg.num_buckets
+    assert st["live_entries"] == 40
+    _probe_all_backends(hm, keys, vals, np.ones(40, bool))
+
+
+def test_displaced_schedules_through_mesh_engine():
+    """The serving differential sweep on the displaced+fingerprint config,
+    through BOTH shard backends (host shards as the reference, mesh fused
+    and unfused against it) on 2 forced devices — stash state included in
+    the per-shard ownership/population checks."""
+    from test_serving_sharded import run_sub
+    run_sub("""
+        from sharded_driver import sweep
+        sweep(seed0=9100, n=8, depths=(2,), zipfian="mixed",
+              per_request_every=4, displaced=True)
+        """)
 
 
 def test_zipfian_schedules_through_mesh_engine():

@@ -35,16 +35,22 @@ import sys
 
 DEFAULT_WINDOW = 5
 
-LOWER_BETTER = ("us_per", "ms", "ns_per", "wall_seconds", "calls_per_tick")
+LOWER_BETTER = ("us_per", "ms", "ns_per", "wall_seconds", "calls_per_tick",
+                "rows_activated")
 HIGHER_BETTER = ("ops_per_sec", "speedup")
 # wall-clock noise-dominated or workload-dependent fields we never guard
 SKIP = ("request_latency", "tick_ms", "wall_seconds", "route_cap",
         "stall_events")
 # eager / interpret-mode timings swing ~1.5x between runs on this container
 # (see CHANGES.md PR 2: "3.7-5.5 us/elem across runs on this noisy
-# container"); they get 2x the band so the guard trips on cliffs, not noise
+# container"); they get 2x the band so the guard trips on cliffs, not noise.
+# Serving throughput/speedup rows are in the same class: a drain is a dozen
+# ticks of wall clock (tens of ms even best-of-N), and an A/B of identical
+# code across container sessions swings them 1.5-2x — ``calls_per_tick``
+# (the fused launch-count contract) deliberately stays on the tight band.
 NOISY = ("vec_us_per_elem", "scan_us_per_elem", "us_per_probe", "grow_ms",
-         "ns_per_live_entry")
+         "ns_per_live_entry", "ops_per_sec", "serving_speedup",
+         "speedup_coalesced")
 NOISY_FACTOR = 2.0
 
 
