@@ -2,7 +2,8 @@
 PYTHON ?= python
 
 .PHONY: test test-slow bench-kernels bench-json bench-serving \
-	bench-serving-mesh bench-smoke fused-smoke fp-smoke bench-check lint ci
+	bench-serving-mesh bench-smoke fused-smoke fp-smoke trace-smoke \
+	bench-check lint ci
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) -m pytest -x -q
@@ -52,6 +53,23 @@ fp-smoke:
 	PYTHONPATH=src:tests$${PYTHONPATH:+:$$PYTHONPATH} \
 	$(PYTHON) -c "from fp_ablation import fp_smoke; fp_smoke()"
 
+# observability smoke: traced YCSB-A kv run on 2 forced host devices with
+# pipeline depth 2 (fused mesh megakernel path), Perfetto export +
+# Prometheus exposition, then trace_report validates the event stream
+# (B/E balance, per-track monotonic ts) and asserts the documented span
+# vocabulary and at least one write-claim pipeline stall
+trace-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	$(PYTHON) -m repro.launch.serve --mode kv --workloads A \
+	    --requests 48 --slots 16 --record-count 512 \
+	    --mesh-shards 2 --pipeline 2 \
+	    --trace-out /tmp/hashmem_trace.json \
+	    --metrics-prom /tmp/hashmem_metrics.prom > /dev/null
+	$(PYTHON) tools/trace_report.py /tmp/hashmem_trace.json \
+	    --assert-spans tick,gather,route,fused_tick,writeback,admit,preload \
+	    --assert-stalls 1
+
 # perf-trajectory regression guard: newest BENCH_*.json run vs the best of
 # the last 5 prior runs, >1.5x fails (noisy eager metrics get a 2x band;
 # first-appearance metrics warn; tools/bench_check.py)
@@ -64,5 +82,5 @@ lint:
 	$(PYTHON) tools/lint.py
 
 # the full gate: lint + tier-1 tests + bench smoke + fused differential
-# smoke + fingerprint ablation + perf guard
-ci: lint test bench-smoke fused-smoke fp-smoke bench-check
+# smoke + fingerprint ablation + traced-run smoke + perf guard
+ci: lint test bench-smoke fused-smoke fp-smoke trace-smoke bench-check

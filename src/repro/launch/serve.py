@@ -131,7 +131,8 @@ def serve(cfg, mesh, *, batch=4, horizon=256, page_tokens=32, requests=8,
 def serve_kv(*, workloads="A", tenants=None, requests=64, slots=16,
              shards=1, record_count=1024, ops_per_request=4,
              max_pending=0, tenant_slots=0, seed=0, backend="ref",
-             mesh_shards=0, pipeline=1, fused_tick=None, verbose=True):
+             mesh_shards=0, pipeline=1, fused_tick=None, verbose=True,
+             trace_out=None, metrics_prom=None):
     """Thin driver over the multi-tenant KV serving engine: one tenant per
     workload letter (comma-separated), YCSB load phase, then a drained
     continuous-batching run.  ``mesh_shards`` > 0 routes the table through
@@ -140,7 +141,11 @@ def serve_kv(*, workloads="A", tenants=None, requests=64, slots=16,
     XLA_FLAGS=--xla_force_host_platform_device_count=N); ``pipeline`` > 1
     enables multi-tick op pipelining; ``fused_tick=False`` falls back from
     the fused whole-tick megakernel (the mesh default: ONE shard_map per
-    tick) to one shard_map call per phase.  Returns (engine, snapshot)."""
+    tick) to one shard_map call per phase.  ``trace_out`` turns on tick
+    tracing and writes Chrome/Perfetto trace-event JSON there after the
+    drain (open in https://ui.perfetto.dev or inspect with
+    tools/trace_report.py); ``metrics_prom`` writes the Prometheus text
+    exposition of the run's metrics.  Returns (engine, snapshot)."""
     from repro.launch.mesh import make_serving_mesh
     from repro.serving import build_ycsb_engine
 
@@ -152,11 +157,21 @@ def serve_kv(*, workloads="A", tenants=None, requests=64, slots=16,
         shards=shards, record_count=record_count,
         ops_per_request=ops_per_request, backend=backend, seed=seed,
         max_pending=max_pending, tenant_slots=tenant_slots, mesh=mesh,
-        pipeline_depth=pipeline, fused_tick=fused_tick)
+        pipeline_depth=pipeline, fused_tick=fused_tick,
+        trace=bool(trace_out))
     per = requests // n_tenants
     reqs = [r for g in gens for r in g.requests(per)]
     eng.submit_all(reqs)
     snap = eng.run()
+    if trace_out:
+        n = eng.export_trace(trace_out, workloads=workloads)
+        if verbose:
+            print(f"wrote {n} trace events -> {trace_out}")
+    if metrics_prom:
+        with open(metrics_prom, "w") as f:
+            f.write(eng.metrics.to_prom())
+        if verbose:
+            print(f"wrote Prometheus exposition -> {metrics_prom}")
     if verbose:
         print(json.dumps({**snap, "engine": eng.stats()}, indent=2,
                          default=str))
@@ -200,6 +215,13 @@ def main():
                     help="(kv mode) use one shard_map call per phase "
                          "instead of the fused whole-tick megakernel "
                          "(mesh default)")
+    ap.add_argument("--trace-out", default=None,
+                    help="(kv mode) enable tick tracing and write "
+                         "Chrome/Perfetto trace-event JSON here "
+                         "(tools/trace_report.py reads it)")
+    ap.add_argument("--metrics-prom", default=None,
+                    help="(kv mode) write the Prometheus text exposition "
+                         "of the run's metrics here")
     args = ap.parse_args()
 
     if args.mode == "kv":
@@ -209,7 +231,8 @@ def main():
                  ops_per_request=args.ops_per_request,
                  backend=args.backend, mesh_shards=args.mesh_shards,
                  pipeline=args.pipeline,
-                 fused_tick=False if args.no_fused_tick else None)
+                 fused_tick=False if args.no_fused_tick else None,
+                 trace_out=args.trace_out, metrics_prom=args.metrics_prom)
         return
 
     if args.arch is None:

@@ -4,7 +4,10 @@
                 slot lifecycle, step-level op coalescing (one vectorized
                 HashMem call per phase per shard per tick)
   tenancy.py  — tenant-folded key space, quotas, per-tenant stats
-  metrics.py  — p50/p99 latency, throughput, occupancy, chain telemetry
+  metrics.py  — bounded log-bucketed histograms, hot-key sketch,
+                per-phase latency, Prometheus exposition
+  tracing.py  — tick-level spans on a bounded ring, Chrome/Perfetto
+                trace-event export (``ServingEngine(trace=True)``)
   loadgen.py  — YCSB-style workloads A-F (zipfian / uniform / latest)
 """
 from repro.serving.engine import (   # noqa: F401
@@ -13,5 +16,6 @@ from repro.serving.engine import (   # noqa: F401
 from repro.serving.loadgen import (  # noqa: F401
     LoadGen, WorkloadSpec, build_ycsb_engine, preload_engine,
 )
-from repro.serving.metrics import MetricsCollector  # noqa: F401
+from repro.serving.metrics import LogHistogram, MetricsCollector, SpaceSaving  # noqa: F401
+from repro.serving.tracing import NULL_TRACER, Tracer  # noqa: F401
 from repro.serving.tenancy import Tenant, TenantRegistry, TenantSpace  # noqa: F401

@@ -137,7 +137,7 @@ def build_ycsb_engine(workloads, *, slots=16, shards=1, record_count=1024,
                       ops_per_request=4, coalesce=True, backend="ref",
                       seed=0, max_pending=0, tenant_slots=0, metrics=None,
                       cfg=None, mesh=None, pipeline_depth=1,
-                      fused_tick=None):
+                      fused_tick=None, trace=None):
     """One preloaded engine + one (tenant, LoadGen) per YCSB workload letter
     — the single assembly path shared by the serve.py kv CLI and
     benchmarks/serving_bench.py, so both exercise identically-sized tables.
@@ -165,6 +165,7 @@ def build_ycsb_engine(workloads, *, slots=16, shards=1, record_count=1024,
     eng = ServingEngine(cfg, num_shards=shards, max_slots=slots,
                         max_pending=max_pending, tenants=reg,
                         metrics=metrics, coalesce=coalesce, mesh=mesh,
-                        pipeline_depth=pipeline_depth, fused_tick=fused_tick)
+                        pipeline_depth=pipeline_depth, fused_tick=fused_tick,
+                        trace=trace)
     preload_engine(eng, gens)
     return eng, gens

@@ -1,11 +1,27 @@
-"""Serving telemetry: latency percentiles, throughput, occupancy, chains.
+"""Serving telemetry on bounded state: log-bucketed histograms, a top-K
+hot-key sketch, per-phase latency blocks, and Prometheus exposition.
 
-Everything is host-side and allocation-light: samples accumulate in plain
-Python lists / counters per tick and are reduced only in ``snapshot()``.
-Chain-length telemetry (the per-probe RLU command depth — the quantity the
-paper's overflow-chaining design trades space against) is sampled from the
-live HashMem on a throttle, since ``hashmap.stats`` is a device walk +
-host sync.
+Everything is host-side, allocation-light, and — unlike the earlier
+list-accumulating collector, which grew ``req_ticks``/``req_secs``/
+``tick_ops`` without bound (an OOM on long serving runs) — **O(1) in run
+length**: samples land in fixed-size :class:`LogHistogram` buckets
+(HdrHistogram-style: exact below ``2*subbuckets`` units, <=
+``1/(2*subbuckets)`` relative error above, so percentiles stay within ~1%
+of exact at the default 64 sub-buckets), counts and occupancy in exact
+running counters, chain telemetry in a bounded ring, and per-key op
+frequencies in a :class:`SpaceSaving` top-K sketch (the classic
+space-saving counter: every reported count overestimates by at most the
+tracked ``err``, and any key with true frequency above ``count_min`` is
+guaranteed present — the right shape for skew/hot-key diagnosis).
+
+``snapshot()`` keeps the historical schema (latency/tick/occupancy/op
+blocks, chain + rows-activated telemetry) and adds per-phase latency
+blocks (fed by the engine's tracer spans via ``record_phase``), the
+queue-vs-service split, and the hot-key table; ``to_prom()`` renders the
+same state as Prometheus text exposition (counters, gauges, and summary
+quantiles) for scraping.  Chain-length telemetry is sampled from the live
+HashMem on a throttle, since ``hashmap.stats`` is a device walk + host
+sync.
 """
 from __future__ import annotations
 
@@ -36,48 +52,211 @@ def percentile(samples, q: float) -> float:
     return finite(np.percentile(np.asarray(samples, np.float64), q))
 
 
-class MetricsCollector:
-    """Per-engine telemetry sink.
+class LogHistogram:
+    """Bounded log-bucketed histogram over non-negative floats.
 
-    * ``record_request(ticks, seconds)`` — request completion latency, both
-      in engine ticks (scheduling depth) and wall seconds;
+    Values are scaled to integer units of ``lsb`` and bucketed
+    HdrHistogram-style: units below ``2*subbuckets`` get their own
+    unit-wide bucket (EXACT — integer-valued series like latency-in-ticks
+    never see quantization there), larger values land in octaves split
+    into ``subbuckets`` linear sub-buckets, so the relative quantization
+    error is at most ``1/(2*subbuckets)`` everywhere.  State is one fixed
+    int64 count array plus exact count/sum/min/max — O(1) memory however
+    many samples are recorded.  ``percentile()`` returns the bucket
+    midpoint clamped into [min, max], which makes single-sample and
+    constant series exact for every q.
+    """
+
+    _MAX_BITS = 52                     # unit magnitudes up to 2^52
+
+    def __init__(self, lsb: float = 1.0, subbuckets: int = 64):
+        assert subbuckets >= 2 and subbuckets & (subbuckets - 1) == 0, \
+            "subbuckets must be a power of two"
+        self.lsb = float(lsb)
+        self.S = subbuckets
+        self._s = subbuckets.bit_length() - 1
+        self.counts = np.zeros((self._MAX_BITS - self._s + 2) * subbuckets,
+                               np.int64)
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+    def _index(self, units: int) -> int:
+        if units < 2 * self.S:
+            return units
+        e = units.bit_length() - 1
+        return (e - self._s + 1) * self.S + ((units >> (e - self._s)) - self.S)
+
+    def record(self, value: float, n: int = 1):
+        v = float(value)
+        if not math.isfinite(v) or v < 0.0:
+            v = 0.0
+        units = min(int(v / self.lsb), (1 << self._MAX_BITS) - 1)
+        self.counts[self._index(units)] += n
+        self.count += n
+        self.total += v * n
+        if v < self.vmin:
+            self.vmin = v
+        if v > self.vmax:
+            self.vmax = v
+
+    def _bucket_mid(self, idx: int) -> float:
+        if idx < 2 * self.S:
+            return idx * self.lsb      # unit-wide bucket: the value itself
+        m = idx // self.S
+        lo = (self.S + idx % self.S) << (m - 1)
+        width = 1 << (m - 1)
+        return (lo + width / 2.0) * self.lsb
+
+    def percentile(self, q: float) -> float:
+        if self.count == 0:
+            return 0.0
+        rank = max(1, int(math.ceil(q / 100.0 * self.count)))
+        nz = np.nonzero(self.counts)[0]
+        cum = np.cumsum(self.counts[nz])
+        idx = int(nz[int(np.searchsorted(cum, rank))])
+        return finite(min(max(self._bucket_mid(idx), self.vmin), self.vmax))
+
+    def mean(self) -> float:
+        return finite(self.total / self.count) if self.count else 0.0
+
+    def min(self) -> float:
+        return self.vmin if self.count else 0.0
+
+    def max(self) -> float:
+        return self.vmax if self.count else 0.0
+
+    def quantiles(self, scale: float = 1.0) -> dict:
+        return {"p50": self.percentile(50) * scale,
+                "p99": self.percentile(99) * scale}
+
+
+class SpaceSaving:
+    """Space-saving top-K frequency sketch (Metwally et al.).
+
+    Tracks at most ``k`` keys; a new key evicts the current minimum and
+    inherits its count as the overestimation ``err``.  Guarantees: every
+    reported count is ``true <= count <= true + err``, and any key whose
+    true frequency exceeds the smallest tracked count is in the sketch —
+    exactly what's needed to name the hot keys under zipfian skew without
+    per-key state.
+    """
+
+    def __init__(self, k: int = 64):
+        assert k >= 1
+        self.k = k
+        self._counts: dict = {}          # key -> [count, err]
+
+    def offer(self, key, n: int = 1):
+        c = self._counts.get(key)
+        if c is not None:
+            c[0] += n
+        elif len(self._counts) < self.k:
+            self._counts[key] = [n, 0]
+        else:
+            mkey = min(self._counts, key=lambda x: self._counts[x][0])
+            mcount = self._counts.pop(mkey)[0]
+            self._counts[key] = [mcount + n, mcount]
+
+    def top(self, n: int = 16) -> list:
+        """[(key, count, err)] sorted by count descending."""
+        items = sorted(self._counts.items(), key=lambda kv: -kv[1][0])
+        return [(k, c, e) for k, (c, e) in items[:n]]
+
+    def __len__(self) -> int:
+        return len(self._counts)
+
+
+# the closed op-kind vocabulary: record_ops() rejects anything else, so a
+# typo'd kind can't mint a phantom counter key that pollutes BENCH rows
+OP_KINDS = ("read", "update", "insert", "delete", "scan", "rmw")
+
+_CHAIN_WINDOW = 64                     # chain-sample ring bound
+
+
+class MetricsCollector:
+    """Per-engine telemetry sink (bounded; see module docstring).
+
+    * ``record_request(ticks, seconds, queue_secs=, service_secs=)`` —
+      request completion latency in engine ticks and wall seconds, plus
+      the submit→admit (queue) vs admit→complete (service) split;
     * ``record_tick(ops, occupancy, seconds)`` — per-tick throughput and
       slot occupancy;
-    * ``record_ops(kind, n, hits)`` — op counts and probe hit rates;
+    * ``record_ops(kind, n, hits)`` — op counts and probe hit rates
+      (``kind`` must be one of :data:`OP_KINDS`: ValueError otherwise);
+    * ``record_phase(name, seconds)`` — per-phase latency (gather / route /
+      fused_tick / writeback / ... — fed from the engine's tracer spans);
+    * ``record_hot_keys(keys)`` — folded keys into the top-K sketch;
     * ``sample_chains(hm)`` — chain-length telemetry from a HashMem.
     """
 
-    def __init__(self, chain_sample_every: int = 32):
+    def __init__(self, chain_sample_every: int = 32, subbuckets: int = 64,
+                 hot_k: int = 64):
         self.t0 = time.perf_counter()
-        self.req_ticks: list[int] = []
-        self.req_secs: list[float] = []
-        self.tick_ops: list[int] = []
-        self.tick_secs: list[float] = []
-        self.occupancy: list[int] = []
-        self.ops = {k: 0 for k in
-                    ("read", "update", "insert", "delete", "scan", "rmw")}
+        self.ticks = 0
+        self.total_ops = 0
+        self.occupancy_sum = 0
+        self.occupancy_max = 0
+        self.requests_completed = 0
+        S = subbuckets
+        self.req_ticks_h = LogHistogram(1.0, S)
+        self.req_secs_h = LogHistogram(1e-6, S)
+        self.queue_secs_h = LogHistogram(1e-6, S)
+        self.service_secs_h = LogHistogram(1e-6, S)
+        self.tick_ops_h = LogHistogram(1.0, S)
+        self.tick_secs_h = LogHistogram(1e-6, S)
+        self.rows_h = LogHistogram(1.0 / 1024, S)
+        self.phase_h: dict[str, LogHistogram] = {}
+        self._subbuckets = S
+        self.ops = {k: 0 for k in OP_KINDS}
         self.hits = 0
         self.probes = 0
+        self.hot = SpaceSaving(hot_k)
         self.chain_sample_every = chain_sample_every
         self._ticks_since_chain_sample = 0
-        self.chain_samples: list[dict] = []
-        self.rows_activated: list[float] = []
+        from collections import deque
+        self.chain_samples: deque = deque(maxlen=_CHAIN_WINDOW)
 
     # -- recording ---------------------------------------------------------
-    def record_request(self, ticks: int, seconds: float):
-        self.req_ticks.append(ticks)
-        self.req_secs.append(seconds)
+    def record_request(self, ticks: int, seconds: float,
+                       queue_secs: float | None = None,
+                       service_secs: float | None = None):
+        self.requests_completed += 1
+        self.req_ticks_h.record(ticks)
+        self.req_secs_h.record(seconds)
+        if queue_secs is not None:
+            self.queue_secs_h.record(queue_secs)
+        if service_secs is not None:
+            self.service_secs_h.record(service_secs)
 
     def record_tick(self, ops: int, occupancy: int, seconds: float):
-        self.tick_ops.append(ops)
-        self.occupancy.append(occupancy)
-        self.tick_secs.append(seconds)
+        self.ticks += 1
+        self.total_ops += int(ops)
+        self.occupancy_sum += int(occupancy)
+        if occupancy > self.occupancy_max:
+            self.occupancy_max = int(occupancy)
+        self.tick_ops_h.record(ops)
+        self.tick_secs_h.record(seconds)
 
     def record_ops(self, kind: str, n: int, hits: int | None = None):
-        self.ops[kind] = self.ops.get(kind, 0) + n
+        if kind not in self.ops:
+            raise ValueError(
+                f"unknown op kind {kind!r} (must be one of {OP_KINDS})")
+        self.ops[kind] += n
         if hits is not None:
             self.probes += n
             self.hits += hits
+
+    def record_phase(self, name: str, seconds: float):
+        h = self.phase_h.get(name)
+        if h is None:
+            h = self.phase_h[name] = LogHistogram(1e-6, self._subbuckets)
+        h.record(seconds)
+
+    def record_hot_keys(self, keys):
+        for k in keys:
+            self.hot.offer(int(k))
 
     def sample_chains(self, hms) -> bool:
         """Throttled chain-length sample over one HashMem, a list of shards
@@ -101,7 +280,7 @@ class MetricsCollector:
         cls = [np.asarray(hashmap.chain_lengths(hm)) for hm in hms]
         cl = np.concatenate(cls)
         self.chain_samples.append({
-            "tick": len(self.tick_ops),
+            "tick": self.ticks,
             "mean_chain": float(cl.mean()),
             "max_chain": int(cl.max(initial=0)),
             "chain_p50": percentile(cl, 50),
@@ -114,42 +293,43 @@ class MetricsCollector:
         """Per-sample mean DRAM-row activations per probe, from
         ``hashmap.rows_activated_per_probe`` on a sampled tick's probe keys
         (the engine throttles this alongside ``sample_chains``)."""
-        self.rows_activated.append(finite(mean_rows))
+        self.rows_h.record(finite(mean_rows))
 
     # -- reduction ---------------------------------------------------------
     def snapshot(self) -> dict:
         wall = time.perf_counter() - self.t0
-        total_ops = int(sum(self.tick_ops))
-        ticks = len(self.tick_ops)
+        ticks = self.ticks
+        total_ops = self.total_ops
         return {
             "wall_seconds": finite(wall),
             "ticks": ticks,
             "total_ops": total_ops,
             "ops_per_sec": finite(total_ops / wall) if wall > 0 else 0.0,
             "ops_per_tick": finite(total_ops / ticks) if ticks else 0.0,
-            "requests_completed": len(self.req_ticks),
+            "requests_completed": self.requests_completed,
             "request_latency_ticks": {
-                "p50": percentile(self.req_ticks, 50),
-                "p99": percentile(self.req_ticks, 99),
-                "max": finite(max(self.req_ticks, default=0)),
+                "p50": self.req_ticks_h.percentile(50),
+                "p99": self.req_ticks_h.percentile(99),
+                "max": finite(self.req_ticks_h.max()),
             },
-            "request_latency_ms": {
-                "p50": percentile(self.req_secs, 50) * 1e3,
-                "p99": percentile(self.req_secs, 99) * 1e3,
-            },
-            "tick_ms": {
-                "p50": percentile(self.tick_secs, 50) * 1e3,
-                "p99": percentile(self.tick_secs, 99) * 1e3,
-            },
+            "request_latency_ms": self.req_secs_h.quantiles(1e3),
+            "queue_ms": self.queue_secs_h.quantiles(1e3),
+            "service_ms": self.service_secs_h.quantiles(1e3),
+            "tick_ms": self.tick_secs_h.quantiles(1e3),
+            "phase_ms": {
+                name: {**h.quantiles(1e3), "mean": h.mean() * 1e3,
+                       "count": h.count}
+                for name, h in sorted(self.phase_h.items())},
             "occupancy": {
-                "mean": finite(np.mean(self.occupancy)) if self.occupancy
-                else 0.0,
-                "max": int(max(self.occupancy, default=0)),
+                "mean": finite(self.occupancy_sum / ticks) if ticks else 0.0,
+                "max": self.occupancy_max,
             },
             "op_counts": dict(self.ops),
             "probe_hit_rate": finite(self.hits / self.probes)
             if self.probes else 0.0,
-            "chain_telemetry": self.chain_samples[-8:],
+            "hot_keys": [{"key": k, "count": c, "err": e}
+                         for k, c, e in self.hot.top(8)],
+            "chain_telemetry": list(self.chain_samples)[-8:],
             "chain_depth": {
                 "p50": self.chain_samples[-1]["chain_p50"]
                 if self.chain_samples else 0.0,
@@ -157,10 +337,9 @@ class MetricsCollector:
                 if self.chain_samples else 0.0,
             },
             "rows_activated": {
-                "p50": percentile(self.rows_activated, 50),
-                "p99": percentile(self.rows_activated, 99),
-                "mean": finite(np.mean(self.rows_activated))
-                if self.rows_activated else 0.0,
+                "p50": self.rows_h.percentile(50),
+                "p99": self.rows_h.percentile(99),
+                "mean": self.rows_h.mean(),
             },
         }
 
@@ -169,3 +348,59 @@ class MetricsCollector:
         # finite() coercions into a hard error instead of invalid JSON
         return json.dumps({**self.snapshot(), **extra}, indent=2,
                           allow_nan=False)
+
+    def to_prom(self, prefix: str = "hashmem") -> str:
+        """Prometheus text exposition of the collector state: op/tick/
+        request counters, occupancy gauges, summary quantiles for the
+        latency histograms (request/queue/service/tick and every recorded
+        phase), and the hot-key table."""
+        snap = self.snapshot()
+        lines: list[str] = []
+
+        def counter(name, value, labels=""):
+            lines.append(f"# TYPE {prefix}_{name} counter")
+            lines.append(f"{prefix}_{name}{labels} {value}")
+
+        def gauge(name, value, labels="", typed=True):
+            if typed:
+                lines.append(f"# TYPE {prefix}_{name} gauge")
+            lines.append(f"{prefix}_{name}{labels} {finite(value)}")
+
+        def summary(name, h: LogHistogram):
+            lines.append(f"# TYPE {prefix}_{name} summary")
+            for q in (0.5, 0.9, 0.99):
+                lines.append(f'{prefix}_{name}{{quantile="{q}"}} '
+                             f"{finite(h.percentile(q * 100))}")
+            lines.append(f"{prefix}_{name}_sum {finite(h.total)}")
+            lines.append(f"{prefix}_{name}_count {h.count}")
+
+        counter("ticks_total", snap["ticks"])
+        counter("ops_total", snap["total_ops"])
+        lines.append(f"# TYPE {prefix}_ops_by_kind_total counter")
+        for kind, n in snap["op_counts"].items():
+            lines.append(f'{prefix}_ops_by_kind_total{{kind="{kind}"}} {n}')
+        counter("requests_completed_total", snap["requests_completed"])
+        gauge("ops_per_sec", snap["ops_per_sec"])
+        gauge("probe_hit_rate", snap["probe_hit_rate"])
+        gauge("occupancy_mean", snap["occupancy"]["mean"])
+        gauge("occupancy_max", snap["occupancy"]["max"])
+        gauge("chain_depth_p99", snap["chain_depth"]["p99"])
+        gauge("rows_activated_mean", snap["rows_activated"]["mean"])
+        summary("request_latency_seconds", self.req_secs_h)
+        summary("request_queue_seconds", self.queue_secs_h)
+        summary("request_service_seconds", self.service_secs_h)
+        summary("tick_seconds", self.tick_secs_h)
+        lines.append(f"# TYPE {prefix}_phase_seconds summary")
+        for name, h in sorted(self.phase_h.items()):
+            for q in (0.5, 0.99):
+                lines.append(
+                    f'{prefix}_phase_seconds{{phase="{name}",'
+                    f'quantile="{q}"}} {finite(h.percentile(q * 100))}')
+            lines.append(f'{prefix}_phase_seconds_sum{{phase="{name}"}} '
+                         f"{finite(h.total)}")
+            lines.append(f'{prefix}_phase_seconds_count{{phase="{name}"}} '
+                         f"{h.count}")
+        lines.append(f"# TYPE {prefix}_hot_key_ops gauge")
+        for k, c, _ in self.hot.top(8):
+            lines.append(f'{prefix}_hot_key_ops{{key="{k:#x}"}} {c}')
+        return "\n".join(lines) + "\n"

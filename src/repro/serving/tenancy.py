@@ -85,6 +85,11 @@ class Tenant:
         "ops": {"read": 0, "update": 0, "insert": 0, "delete": 0,
                 "scan": 0, "rmw": 0},
         "hits": 0, "misses": 0,
+        # wall-time sums over COMPLETED requests: submit->admit (queue)
+        # and admit->complete (service) — per-tenant view of the engine's
+        # queue/service latency split (metrics.py histograms hold the
+        # engine-wide quantiles)
+        "queue_secs": 0.0, "service_secs": 0.0,
     })
 
 

@@ -88,3 +88,165 @@ def test_zero_wall_clock_guard():
     m.t0 = __import__("time").perf_counter()  # wall ~ 0
     snap = m.snapshot()
     assert math.isfinite(snap["ops_per_sec"])
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 9: bounded histograms / sketches replace the unbounded lists
+# ---------------------------------------------------------------------------
+
+def test_log_histogram_percentiles_within_5pct():
+    """Acceptance bar: histogram percentiles within 5% of exact over a
+    differential corpus of distributions (exponential, lognormal, uniform,
+    zipf-ish heavy tail)."""
+    from repro.serving.metrics import LogHistogram
+    rng = np.random.default_rng(0)
+    corpora = [
+        rng.exponential(5e-3, 20_000),           # latency-like
+        rng.lognormal(-7.0, 1.5, 20_000),        # heavy-tailed seconds
+        rng.uniform(0.0, 100.0, 20_000),
+        rng.pareto(1.5, 20_000) + 1.0,
+    ]
+    for samples in corpora:
+        h = LogHistogram(lsb=1e-6)
+        for v in samples:
+            h.record(v)
+        for q in (50, 90, 99, 99.9):
+            # nearest-rank exact (the histogram's rank convention; the
+            # default linear interpolation differs by a whole inter-sample
+            # gap in a heavy tail, which isn't quantization error)
+            exact = float(np.percentile(samples, q, method="inverted_cdf"))
+            got = h.percentile(q)
+            assert got == pytest.approx(exact, rel=0.05), (q, exact, got)
+        assert h.mean() == pytest.approx(float(samples.mean()), rel=1e-9)
+        assert h.min() == pytest.approx(float(samples.min()))
+        assert h.max() == pytest.approx(float(samples.max()))
+
+
+def test_log_histogram_exact_for_small_integers():
+    from repro.serving.metrics import LogHistogram
+    h = LogHistogram(lsb=1.0, subbuckets=64)
+    # latency-in-ticks style series: all values below 2*64 are EXACT
+    for v in [1, 1, 2, 3, 5, 8, 13, 21, 34, 55, 89, 127]:
+        h.record(v)
+    assert h.percentile(50) == 8       # nearest rank: 6th of 12 samples
+    assert h.percentile(100) == 127
+    assert h.percentile(0) == 1
+
+
+def test_log_histogram_memory_is_constant():
+    """O(1) in run length: the count array never grows however many
+    samples are recorded (the old list-based collector grew per sample)."""
+    from repro.serving.metrics import LogHistogram
+    h = LogHistogram(lsb=1e-6)
+    size0 = h.counts.nbytes
+    for i in range(50_000):
+        h.record((i % 977) * 1e-5)
+    assert h.counts.nbytes == size0
+    assert h.count == 50_000
+
+
+def test_log_histogram_rejects_garbage_gracefully():
+    from repro.serving.metrics import LogHistogram
+    h = LogHistogram(lsb=1e-6)
+    h.record(float("nan"))
+    h.record(float("inf"))
+    h.record(-5.0)
+    h.record(1e30)                       # clamped into the top octave
+    assert h.count == 4
+    assert math.isfinite(h.percentile(99))
+
+
+def test_record_ops_rejects_unknown_kind():
+    m = MetricsCollector()
+    m.record_ops("read", 3, hits=2)
+    with pytest.raises(ValueError, match="unknown op kind"):
+        m.record_ops("raed", 1)          # the typo that minted phantom keys
+    with pytest.raises(ValueError):
+        m.record_ops("probe", 1)
+    assert set(m.ops) == {"read", "update", "insert", "delete", "scan",
+                          "rmw"}
+
+
+def test_space_saving_sketch_guarantees():
+    from repro.serving.metrics import SpaceSaving
+    rng = np.random.default_rng(1)
+    ss = SpaceSaving(k=16)
+    truth: dict = {}
+    # zipf-ish stream over ~200 distinct keys
+    stream = rng.zipf(1.3, 20_000) % 200
+    for k in stream:
+        k = int(k)
+        truth[k] = truth.get(k, 0) + 1
+        ss.offer(k)
+    assert len(ss) <= 16
+    top_true = sorted(truth, key=lambda k: -truth[k])[:4]
+    reported = {k: (c, e) for k, c, e in ss.top(16)}
+    for k in top_true:                   # hottest keys are present
+        assert k in reported, (k, truth[k])
+        c, e = reported[k]
+        assert truth[k] <= c <= truth[k] + e   # the classic SS bound
+
+
+def test_collector_state_is_bounded():
+    """snapshot() memory O(1) in run length: drive 10k ticks/requests and
+    check no per-sample state accumulated."""
+    m = MetricsCollector(chain_sample_every=1)
+    from repro.serving.metrics import _CHAIN_WINDOW
+    for i in range(10_000):
+        m.record_tick(8, 4, 1e-4)
+        m.record_request(3, 2e-3, queue_secs=1e-4, service_secs=1.9e-3)
+        m.record_phase("gather", 1e-5)
+        m.record_hot_keys([i % 500])
+        m.chain_samples.append({"tick": i, "chain_p50": 1.0,
+                                "chain_p99": 2.0})
+    assert len(m.chain_samples) == _CHAIN_WINDOW
+    assert len(m.hot) <= 64
+    snap = m.snapshot()
+    assert len(snap["chain_telemetry"]) == 8
+    assert len(snap["hot_keys"]) == 8
+    assert snap["requests_completed"] == 10_000
+    assert snap["queue_ms"]["p50"] == pytest.approx(0.1, rel=0.02)
+    assert snap["service_ms"]["p50"] == pytest.approx(1.9, rel=0.02)
+    assert snap["phase_ms"]["gather"]["count"] == 10_000
+    json.loads(m.to_json())
+
+
+def test_to_prom_exposition_format():
+    m = MetricsCollector()
+    m.record_tick(4, 2, 0.001)
+    m.record_request(3, 0.002, queue_secs=5e-4, service_secs=1.5e-3)
+    m.record_ops("read", 4, hits=3)
+    m.record_phase("gather", 1e-4)
+    m.record_hot_keys([0xBEEF] * 3)
+    text = m.to_prom()
+    assert text.endswith("\n")
+    lines = text.splitlines()
+    # every non-comment line is "name{labels} value" with a finite value
+    for ln in lines:
+        if ln.startswith("#"):
+            assert ln.startswith("# TYPE hashmem_")
+            continue
+        name, val = ln.rsplit(" ", 1)
+        assert name.startswith("hashmem_")
+        assert math.isfinite(float(val)), ln
+    assert "hashmem_ticks_total 1" in text
+    assert 'hashmem_ops_by_kind_total{kind="read"} 4' in text
+    assert 'hashmem_request_latency_seconds{quantile="0.5"}' in text
+    assert 'hashmem_phase_seconds{phase="gather",quantile="0.5"}' in text
+    assert 'hashmem_hot_key_ops{key="0xbeef"} 3' in text
+
+
+def test_snapshot_schema_back_compat():
+    """The historical snapshot keys the benches/stats consume survive the
+    histogram rewrite."""
+    m = MetricsCollector()
+    m.record_tick(4, 2, 0.001)
+    m.record_request(3, 0.002)
+    snap = m.snapshot()
+    for key in ("wall_seconds", "ticks", "total_ops", "ops_per_sec",
+                "ops_per_tick", "requests_completed",
+                "request_latency_ticks", "request_latency_ms", "tick_ms",
+                "occupancy", "op_counts", "probe_hit_rate",
+                "chain_telemetry", "chain_depth", "rows_activated",
+                "queue_ms", "service_ms", "phase_ms", "hot_keys"):
+        assert key in snap, key

@@ -36,7 +36,7 @@ import sys
 DEFAULT_WINDOW = 5
 
 LOWER_BETTER = ("us_per", "ms", "ns_per", "wall_seconds", "calls_per_tick",
-                "rows_activated")
+                "rows_activated", "trace_overhead")
 HIGHER_BETTER = ("ops_per_sec", "speedup")
 # wall-clock noise-dominated or workload-dependent fields we never guard
 SKIP = ("request_latency", "tick_ms", "wall_seconds", "route_cap",
@@ -52,6 +52,12 @@ NOISY = ("vec_us_per_elem", "scan_us_per_elem", "us_per_probe", "grow_ms",
          "ns_per_live_entry", "ops_per_sec", "serving_speedup",
          "speedup_coalesced")
 NOISY_FACTOR = 2.0
+# absolute (run-independent) ceilings, keyed by the metric's FIELD name
+# (the part after the row prefix), all lower-better: ``trace_overhead`` is
+# the traced/untraced ops-per-sec ratio from serving_bench — the ISSUE-9
+# bar says enabling tracing may cost at most 10% throughput.  Unlike the
+# windowed relative check, these fire even on a metric's first appearance.
+ABS_BARS = {"trace_overhead": 1.10}
 
 
 def _direction(key: str):
@@ -95,6 +101,10 @@ def check_runs(runs: list, threshold: float,
     failures, warnings = [], []
     compared = 0
     for name, (d, v) in newest.items():
+        bar_abs = ABS_BARS.get(name.rsplit(".", 1)[-1])
+        if bar_abs is not None and v > bar_abs:
+            # absolute ceiling: direction "abs", "best" carries the bar
+            failures.append((name, "abs", bar_abs, v, v / bar_abs))
         best = None
         for p in prior:
             if name in p and p[name][0] == d:
@@ -130,6 +140,10 @@ def check_file(path: str, threshold: float,
         print(f"  NEW METRIC {name}: first appearance, no prior baseline "
               f"(guarded from the next run on)")
     for name, d, best, v, ratio in failures:
+        if d == "abs":
+            print(f"  ABS BAR {name}: {v:.4g} exceeds the hard ceiling "
+                  f"{best:.4g} ({ratio:.2f}x over)")
+            continue
         want = "higher" if d == "up" else "lower"
         print(f"  REGRESSION {name}: best prior {best:.4g}, "
               f"newest {v:.4g} ({ratio:.2f}x worse; {want}-is-better)")
