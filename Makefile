@@ -3,7 +3,7 @@ PYTHON ?= python
 
 .PHONY: test test-slow bench-kernels bench-json bench-serving \
 	bench-serving-mesh bench-smoke fused-smoke fp-smoke trace-smoke \
-	bench-check lint ci
+	grow-smoke bench-check lint ci
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) -m pytest -x -q
@@ -70,6 +70,21 @@ trace-smoke:
 	    --assert-spans tick,gather,route,fused_tick,writeback,admit,preload \
 	    --assert-stalls 1
 
+# extendible-resize smoke: insert-heavy pipelined (depth 2) mesh run on 2
+# forced host devices that forces >= 2 group splits mid-pipeline, bit-
+# compared against the host reference and the DictModel replay
+# (tests/sharded_driver.py grow_smoke); trace_report then asserts the
+# repairs traced as "split" spans and NO "grow" (rebuild) span occurred —
+# an extendible split must repair inline without a stop-the-world rebuild
+grow-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+	PYTHONPATH=src:tests$${PYTHONPATH:+:$$PYTHONPATH} \
+	$(PYTHON) -c "from sharded_driver import grow_smoke; \
+	    grow_smoke('/tmp/hashmem_grow_trace.json')"
+	$(PYTHON) tools/trace_report.py /tmp/hashmem_grow_trace.json \
+	    --assert-spans tick,split,fused_tick,writeback \
+	    --forbid-spans grow
+
 # perf-trajectory regression guard: newest BENCH_*.json run vs the best of
 # the last 5 prior runs, >1.5x fails (noisy eager metrics get a 2x band;
 # first-appearance metrics warn; tools/bench_check.py)
@@ -82,5 +97,7 @@ lint:
 	$(PYTHON) tools/lint.py
 
 # the full gate: lint + tier-1 tests + bench smoke + fused differential
-# smoke + fingerprint ablation + traced-run smoke + perf guard
-ci: lint test bench-smoke fused-smoke fp-smoke trace-smoke bench-check
+# smoke + fingerprint ablation + traced-run smoke + extendible-resize
+# smoke + perf guard
+ci: lint test bench-smoke fused-smoke fp-smoke trace-smoke grow-smoke \
+	bench-check

@@ -173,6 +173,106 @@ def trace_overhead_row(*, workloads, slots, shards, record_count,
             "meets_trace_bar": overhead <= 1.10}
 
 
+def growth_row(*, seed=7, repeats=3, slots=16) -> dict:
+    """p99 under growth: the IDENTICAL zipfian insert-heavy stream through
+    two engines differing ONLY in ``cfg.resize``.  The stream inserts ~500
+    hot-skewed keys into an 8-bucket table with a 2-page chain bound, so
+    the table must resize many times mid-serving:
+
+      * ``rebuild``     — every repair is a stop-the-world ``grow()``
+        rehash of the whole (thousands-of-pages) arena: the requests in
+        flight during that tick absorb the rebuild wall time;
+      * ``extendible``  — the hot GROUP splits alone (and the directory
+        doubles by pointer copy, >= 4 doublings on this stream), so no
+        request ever waits on a full rehash.
+
+    The A/B is interleaved (same min-of-N discipline as trace_overhead_row)
+    and the acceptance gate is ``p99_growth_ratio`` = extendible p99 ms /
+    rebuild p99 ms, hard-bounded < 1.0 by tools/bench_check.py ABS_BARS —
+    the raw per-mode ``*request_latency*`` fields are wall-clock noise and
+    stay unguarded (SKIP).  Request latency in TICKS is schedule-determined
+    and must be identical between the modes (reported as a sanity pair).
+    """
+    import dataclasses
+
+    import numpy as np
+
+    from repro.configs.base import HashMemConfig
+    from repro.serving import Request, ServingEngine
+
+    def streams():
+        # mirrors tests/model.make_insert_heavy_schedule (tests/ is not on
+        # the bench path): insert-dominated, zipf-skewed key choice so the
+        # chain overflow concentrates on hot buckets
+        rng = np.random.default_rng(seed)
+        keyspace = 4096
+        w = 1.0 / np.arange(1, keyspace + 1, dtype=np.float64) ** 0.6
+        w /= w.sum()
+        probs = [0.8, 0.08, 0.08, 0.04]             # insert/update/read/del
+        reqs = []
+        for _ in range(128):
+            ops = []
+            for _ in range(5):
+                k = int(rng.choice(keyspace, p=w))
+                v = int(rng.integers(1, 2 ** 20))
+                kind = ["insert", "update", "read", "delete"][
+                    int(rng.choice(4, p=probs))]
+                ops.append({"insert": ("insert", k, v),
+                            "update": ("update", k, v),
+                            "read": ("read", k),
+                            "delete": ("delete", k)}[kind])
+            reqs.append(ops)
+        return reqs
+
+    # one small hot table, arena sized with split-leak slack (a split
+    # abandons its old overflow pages until compact/grow reclaims them)
+    base = HashMemConfig(num_buckets=8, slots_per_page=4,
+                         overflow_pages=2040, max_chain=2, backend="ref",
+                         auto_grow=True, max_load_factor=1.0)
+    best = {m: None for m in ("rebuild", "extendible")}
+    for rep in range(-1, max(repeats, 1)):          # rep -1 warms both
+        for mode in ("rebuild", "extendible"):
+            cfg = dataclasses.replace(base, resize=mode)
+            eng = ServingEngine(cfg, max_slots=slots)
+            eng.submit_all([Request(ops=ops) for ops in streams()])
+            while not eng.pool.idle() and eng.ticks < 100_000:
+                eng.tick()
+            eng.flush()
+            snap = eng.run()
+            if rep < 0:
+                continue
+            p99 = snap["request_latency_ms"]["p99"]
+            if best[mode] is None or p99 < best[mode]["p99_ms"]:
+                best[mode] = {
+                    "p99_ms": p99,
+                    "p50_ms": snap["request_latency_ms"]["p50"],
+                    "p99_ticks": snap["request_latency_ticks"]["p99"],
+                    "grow_events": eng.grow_events,
+                    "splits": eng.split_events,
+                    "doublings": eng.directory_doublings,
+                }
+    reb, ext = best["rebuild"], best["extendible"]
+    # the stream must actually force growth in BOTH modes, >= 4 directory
+    # doublings extendible-side (the ISSUE acceptance shape) and zero
+    # stop-the-world rebuilds on the extendible engine
+    assert reb["grow_events"] >= 1, reb
+    assert ext["doublings"] >= 4 and ext["splits"] >= 4, ext
+    assert ext["grow_events"] == 0, ext
+    return {
+        "name": f"serving_p99_under_growth_{slots}slots",
+        "rebuild_grow_events": reb["grow_events"],
+        "extendible_splits": ext["splits"],
+        "extendible_doublings": ext["doublings"],
+        "rebuild_request_latency_ms_p50": reb["p50_ms"],
+        "rebuild_request_latency_ms_p99": reb["p99_ms"],
+        "extendible_request_latency_ms_p50": ext["p50_ms"],
+        "extendible_request_latency_ms_p99": ext["p99_ms"],
+        "rebuild_request_latency_ticks_p99": reb["p99_ticks"],
+        "extendible_request_latency_ticks_p99": ext["p99_ticks"],
+        "p99_growth_ratio": _ratio(ext["p99_ms"], reb["p99_ms"]),
+    }
+
+
 def _mesh_rows(num_shards: int, slots: int, kw: dict) -> list:
     """mesh/mesh_pipelined (per-phase baseline) + mesh_fused rows, plus the
     fused-vs-unfused comparison row.  Needs ``num_shards`` jax devices."""
@@ -240,6 +340,9 @@ def main():
                          "jax devices; see module docstring)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny run for CI (make ci)")
+    ap.add_argument("--growth", action="store_true",
+                    help="force the p99-under-growth A/B row (always on "
+                         "for non-smoke runs)")
     ap.add_argument("--mesh-rows-json", action="store_true",
                     help=argparse.SUPPRESS)  # child mode: emit mesh rows
     args = ap.parse_args()
@@ -265,6 +368,10 @@ def main():
     # tools/bench_check.py (ABS_BARS), never assumed
     trace_row = trace_overhead_row(**kw)
     rows = [co, pr, pi]
+    if args.growth or not args.smoke:
+        # latency-bounded growth acceptance: extendible p99 strictly below
+        # rebuild p99 on a >=4-doubling insert storm (bench_check ABS bar)
+        rows.append(growth_row(seed=args.seed + 7))
     if args.mesh_shards:
         rows += _mesh_block(args, kw)
     speedup = _ratio(co["ops_per_sec"], pr["ops_per_sec"])

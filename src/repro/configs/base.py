@@ -245,6 +245,16 @@ class HashMemConfig:
     auto_grow: bool = True           # arena exhaustion triggers resize instead
                                      # of dropped writes (insert_auto)
     growth_factor: int = 2           # buckets/overflow scale per grow()
+    resize: str = "rebuild"          # "rebuild": grow() = stop-the-world
+                                     # rehash-rebuild of the whole table;
+                                     # "extendible": directory-based
+                                     # extendible hashing (Dash) — an
+                                     # overflowing bucket group splits alone
+                                     # (one new page row written), the
+                                     # directory doubles by pointer copy,
+                                     # every other group stays probe-able.
+                                     # Requires pow2 num_buckets; excludes
+                                     # displacement (hashmap.create checks)
     max_load_factor: float = 0.85    # proactive-grow threshold (live / slots)
     compact_tombstone_frac: float = 0.25  # compact() when tombstones exceed
                                           # this fraction of total slots

@@ -7,6 +7,7 @@ which is exactly what these mixers rely on.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 U32 = jnp.uint32
 
@@ -49,6 +50,46 @@ def hash_to_bucket(keys, num_buckets: int, fn: str = "murmur3_fmix", salt: int =
     """keys (…,) uint32 -> bucket ids (…,) int32 in [0, num_buckets)."""
     h = HASH_FNS[fn](keys, salt)
     return (h % U32(num_buckets)).astype(jnp.int32)
+
+
+def bits_used(num_buckets: int) -> int:
+    """Exact log2 of a power-of-two directory size (extendible hashing's
+    global depth).  With ``num_buckets = 2**d`` the modulo in
+    :func:`hash_to_bucket` IS the low-``d``-bits prefix, so the existing
+    bucket id doubles as the directory index."""
+    d = num_buckets.bit_length() - 1
+    if num_buckets <= 0 or (1 << d) != num_buckets:
+        raise ValueError(
+            f"extendible resize needs a power-of-two directory; "
+            f"num_buckets={num_buckets} is not")
+    return d
+
+
+def hash_prefix(keys, depth: int, fn: str = "murmur3_fmix",
+                salt: int = 0x9E3779B9):
+    """Low-``depth``-bits hash prefix, int32 — the extendible-hashing bucket
+    resolution: at local depth ``ld`` every key of a group shares
+    ``hash_prefix(key, ld)``, and a split separates them on bit ``ld``."""
+    h = HASH_FNS[fn](keys, salt)
+    return (h & U32((1 << depth) - 1)).astype(jnp.int32)
+
+
+# Keys at or above this floor are reserved: ROUTE_PAD (0xFFFFFFF0, routing
+# padding — rlu.py), and the EMPTY/TOMBSTONE sentinels at the top.
+RESERVED_KEY_FLOOR = 0xFFFFFFF0
+
+
+def validate_user_keys(keys, where: str = "insert"):
+    """Raise ValueError if any key collides with the reserved pad/sentinel
+    range [0xFFFFFFF0, 0xFFFFFFFF].  A stored key up there would silently
+    become routing padding or an empty/tombstone marker.  Shared by the
+    serving admission path and the decode-mode page-table allocator."""
+    keys = np.asarray(keys)
+    if keys.size and int(keys.max()) >= RESERVED_KEY_FLOOR:
+        bad = int(keys[keys >= RESERVED_KEY_FLOOR][0])
+        raise ValueError(
+            f"{where} key {bad:#x} collides with the reserved pad/sentinel "
+            f"range [{RESERVED_KEY_FLOOR:#x}, 0xffffffff]")
 
 
 # Fixed salts for the fingerprint lane and the second (displacement) bucket

@@ -73,8 +73,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import HashMemConfig
 from repro.core import layout
-from repro.core.hashing import (EMPTY_KEY, TOMBSTONE_KEY, fingerprint,
-                                hash_to_bucket, hash_to_bucket2)
+from repro.core.hashing import (EMPTY_KEY, TOMBSTONE_KEY, bits_used,
+                                fingerprint, hash_to_bucket, hash_to_bucket2)
 
 I32 = jnp.int32
 U32 = jnp.uint32
@@ -123,12 +123,32 @@ def _keep_planes(cfg: HashMemConfig) -> bool:
     return cfg.backend == "bitserial"
 
 
+def _check_resize(cfg: HashMemConfig) -> Optional[int]:
+    """Validate the resize knob; returns the global depth for extendible
+    tables (None for rebuild).  Extendible resize needs a power-of-two
+    directory (the bucket id IS the low-bits hash prefix) and excludes the
+    displacement/stash paths (a displaced entry lives at H1 OR H2, so a
+    single group's entries are not re-bucketable in isolation)."""
+    if cfg.resize not in ("rebuild", "extendible"):
+        raise ValueError(f"unknown resize mode {cfg.resize!r} "
+                         f"(want 'rebuild' or 'extendible')")
+    if cfg.resize != "extendible":
+        return None
+    if cfg.displacement or cfg.stash_slots:
+        raise ValueError("resize='extendible' excludes displacement/stash "
+                         "(split re-buckets one group in isolation; a "
+                         "displaced entry's home is H1 OR H2)")
+    return bits_used(cfg.num_buckets)
+
+
 def create(cfg: HashMemConfig) -> HashMem:
     """Empty HashMem: every bucket pre-owns its direct page (paper §2.4)."""
+    gd = _check_resize(cfg)
     store = layout.empty_store(cfg.num_pages, cfg.slots_per_page,
                                cfg.key_bits, with_planes=_keep_planes(cfg),
                                fp_bits=cfg.fingerprint_bits,
-                               stash_slots=cfg.stash_slots)
+                               stash_slots=cfg.stash_slots,
+                               local_depth=gd)
     store = dataclasses.replace(
         store, free_top=jnp.asarray(cfg.num_buckets, dtype=I32))
     return HashMem(
@@ -224,6 +244,10 @@ def _scatter_build(cfg: HashMemConfig, keys: jax.Array, vals: jax.Array,
         stash = jnp.broadcast_to(jnp.array([EMPTY_KEY, 0], dtype=U32),
                                  (cfg.stash_slots, 2))
         stash_fill = jnp.asarray(0, dtype=I32)
+    # extendible tables leave a (re)build with a flat directory: every group
+    # back at the global depth, all leaked split pages reclaimed
+    gd = _check_resize(cfg)
+    depths = None if gd is None else jnp.full((cfg.num_pages,), gd, I32)
 
     store = layout.PageStore(pool=pool, planes=planes, page_next=page_next,
                              page_fill=page_fill,
@@ -231,6 +255,7 @@ def _scatter_build(cfg: HashMemConfig, keys: jax.Array, vals: jax.Array,
                              key_bits=cfg.key_bits,
                              fprints=fprints, stash=stash,
                              stash_fill=stash_fill,
+                             local_depth=depths,
                              fp_bits=cfg.fingerprint_bits)
     return HashMem(store=store,
                    bucket_head=jnp.arange(cfg.num_buckets, dtype=I32),
@@ -519,6 +544,16 @@ def _insert_chained(hm: HashMem, keys: jax.Array, vals: jax.Array,
     b = b.astype(I32)
     if valid is not None:
         b = jnp.where(valid, b, cfg.num_buckets)   # pads sort to the end
+    if cfg.resize == "extendible" and hm.store.local_depth is not None:
+        # canonicalize to the group id (low local_depth bits): directory
+        # aliases of one group must form ONE sort segment below, or two
+        # aliased buckets would both append at the same tail fill and
+        # collide on slots.  Probe/delete need no such fold — the aliased
+        # bucket_head gather already lands on the shared chain.
+        heads = hm.bucket_head[jnp.minimum(b, cfg.num_buckets - 1)]
+        ld = hm.store.local_depth[heads]
+        mask = (jnp.int32(1) << ld) - 1
+        b = jnp.where(b < cfg.num_buckets, b & mask, b)
 
     # clamped gather: dropped entries read bucket 0's tail, never used
     tail, fill, clen = _chain_tails(hm, jnp.minimum(b, cfg.num_buckets - 1))
@@ -897,30 +932,189 @@ def rebuild_check(hm: HashMem, new_cfg: HashMemConfig,
     return _fit_report(counts, new_cfg)
 
 
-def insert_auto(hm: HashMem, keys: jax.Array, vals: jax.Array,
-                bucket_fn: Optional[BucketFn] = None, max_grows: int = 8):
-    """Host-level insert with auto-grow (NOT jit-compatible: growth changes
-    array shapes).  Grows proactively when the batch would exceed
-    config.max_load_factor and reactively while any element fails, up to
-    ``max_grows`` doublings.  Returns (new_hm, ok (B,) bool) — ok is all-True
-    unless growth was exhausted/disabled."""
+# ---------------------------------------------------------------------------
+# Extendible resize (directory-based; Dash) — resize="extendible"
+# ---------------------------------------------------------------------------
+#
+# The existing structure already IS a directory: with num_buckets = 2^gd the
+# bucket id (hash % num_buckets) is the low-gd-bits hash prefix, and the
+# bucket_head gather every probe/delete/insert performs is the directory
+# indirection.  Extendible mode adds per-GROUP local depths (a page lane on
+# the store, meaningful at group-head pages): directory entries sharing the
+# low local_depth bits alias ONE page-chain group.
+#
+#   * split_group: an overflowing group (local depth ld < global depth gd)
+#     splits ALONE — its live entries are re-bucketed on hash bit ld into
+#     the old head and ONE newly allocated page region; the directory
+#     aliases are repointed (pointer writes); every other group's pages,
+#     chains and directory entries are untouched and probe-able throughout.
+#   * double_directory: when ld == gd the directory doubles by POINTER COPY
+#     (bucket_head -> concat of itself) with ZERO data movement.  The page
+#     arena is deliberately kept the same size (num_buckets doubles,
+#     overflow_pages shrinks by the same amount) so every array shape in the
+#     store is invariant — only the directory itself reallocates.
+#   * grow()/compact() stay available as the fallback/reclaim path: a
+#     rebuild under an extendible config resets the directory flat (every
+#     group back at depth gd) and reclaims pages leaked by splits (a split
+#     abandons its old overflow pages to keep pim_malloc a bump pointer).
+
+def split_group(hm: HashMem, bucket: int,
+                bucket_fn: Optional[BucketFn] = None):
+    """Split the group owning ``bucket`` one level deeper (HOST-level,
+    shape-preserving).  Returns (hm, status):
+
+      * "ok"          — split done; group entries re-bucketed on bit ld.
+      * "need_double" — local depth == global depth: double_directory first.
+      * "full"        — the arena cannot supply the new head/overflow pages.
+      * "stuck"       — a child would exceed max_chain (entries share hash
+                        bits past this depth); only a full grow() helps.
+
+    The mutation is ordered like any insert-phase write: it touches only
+    this group's pages plus the directory aliases of this group, so every
+    concurrent probe of OTHER groups resolves identically before/after."""
+    import numpy as np
+    cfg = hm.config
+    gd = bits_used(cfg.num_buckets)
+    S = cfg.slots_per_page
+    head0 = int(hm.bucket_head[int(bucket) % cfg.num_buckets])
+    ld = int(hm.store.local_depth[head0])
+    if ld >= gd:
+        return hm, "need_double"
+    c = int(bucket) & ((1 << ld) - 1)              # canonical group id
+
+    # walk the chain on the host (bounded) and pull the live entries in
+    # chain order — flat page-major slot order IS per-key age order
+    pages = []
+    page_next = np.asarray(hm.page_next)
+    p = head0
+    while p >= 0 and len(pages) <= cfg.max_chain:
+        pages.append(p)
+        p = int(page_next[p])
+    flat = np.asarray(hm.store.pool[jnp.asarray(pages, I32)]).reshape(-1, 2)
+    k, v = flat[:, 0], flat[:, 1]
+    live = (k != np.uint32(0xFFFFFFFF)) & (k != np.uint32(0xFFFFFFFE))
+    lk, lv = k[live], v[live]
+
+    # pre-flight: both children must fit their chain/arena bounds BEFORE any
+    # mutation (a half-performed split would lose entries)
+    if lk.size:
+        if bucket_fn is None:
+            hb = np.asarray(hash_to_bucket(jnp.asarray(lk), cfg.num_buckets,
+                                           cfg.hash_fn, cfg.salt))
+        else:
+            hb = np.asarray(bucket_fn(jnp.asarray(lk), cfg))
+        goes_hi = ((hb >> ld) & 1) == 1
+        n_lo, n_hi = int((~goes_hi).sum()), int(goes_hi.sum())
+    else:
+        n_lo = n_hi = 0
+    pg_lo = max(-(-n_lo // S), 1)
+    pg_hi = max(-(-n_hi // S), 1)
+    if pg_lo > cfg.max_chain or pg_hi > cfg.max_chain:
+        return hm, "stuck"
+    need = 1 + (pg_lo - 1) + (pg_hi - 1)           # new head + overflow
+    free_top = int(hm.free_top)
+    if free_top + need > cfg.num_pages:
+        return hm, "full"
+
+    # clear the old chain through write_slots (keeps bit-planes and the
+    # fingerprint lane consistent), reset its fills/links; overflow pages of
+    # the old chain are LEAKED (bump allocator) until compact()/grow()
+    new_head = free_top
+    L = len(pages)
+    store = hm.store.write_slots(
+        jnp.asarray(np.repeat(pages, S), I32),
+        jnp.asarray(np.tile(np.arange(S), L), I32),
+        jnp.full((L * S,), EMPTY_KEY, U32), jnp.zeros((L * S,), U32))
+    pg_arr = jnp.asarray(pages, I32)
+    both = jnp.asarray([head0, new_head], I32)
+    store = dataclasses.replace(
+        store,
+        page_fill=store.page_fill.at[pg_arr].set(0),
+        page_next=store.page_next.at[pg_arr].set(-1),
+        local_depth=store.local_depth.at[both].set(ld + 1),
+        free_top=jnp.asarray(new_head + 1, I32))
+
+    # directory: the group's aliases are c + m*2^ld; bit ld of the alias
+    # (odd m) selects the new head — pointer writes only
+    m = jnp.arange(cfg.num_buckets >> ld, dtype=I32)
+    idxs = c + (m << ld)
+    heads = jnp.where((m & 1) == 1, new_head, head0).astype(I32)
+    hm2 = HashMem(store=store,
+                  bucket_head=hm.bucket_head.at[idxs].set(heads),
+                  config=cfg)
+
+    # re-insert the extracted entries: the insert path's canonicalization
+    # routes each to its (depth ld+1) child, preserving chain order
+    if lk.size:
+        if bucket_fn is None:
+            b = hash_to_bucket(jnp.asarray(lk), cfg.num_buckets, cfg.hash_fn,
+                               cfg.salt)
+        else:
+            b = bucket_fn(jnp.asarray(lk), cfg)
+        hm2, ok = insert_with_buckets(hm2, jnp.asarray(lk), jnp.asarray(lv), b)
+        assert bool(np.asarray(ok).all()), "split re-insert overflowed"
+    return hm2, "ok"
+
+
+def double_directory(hm: HashMem) -> Optional[HashMem]:
+    """Double the bucket directory by pointer copy — NO data movement.
+
+    num_buckets doubles while overflow_pages shrinks by the old directory
+    size, so ``num_pages`` (and with it every store array shape) is
+    INVARIANT: the new directory entries are aliases of their low-half
+    groups at unchanged local depths.  Returns None when the overflow
+    arena cannot cede num_buckets pages of accounting (the caller falls
+    back to a genuine grow() rebuild)."""
+    cfg = hm.config
+    bits_used(cfg.num_buckets)                     # validate pow2
+    if cfg.overflow_pages < cfg.num_buckets:
+        return None
+    cfg2 = dataclasses.replace(
+        cfg, num_buckets=cfg.num_buckets * 2,
+        overflow_pages=cfg.overflow_pages - cfg.num_buckets)
+    return HashMem(store=hm.store,
+                   bucket_head=jnp.concatenate([hm.bucket_head,
+                                                hm.bucket_head]),
+                   config=cfg2)
+
+
+def grow_extendible(hm: HashMem, bucket: int,
+                    bucket_fn: Optional[BucketFn] = None):
+    """Make room in the group owning ``bucket``: split it, doubling the
+    directory first when its local depth has reached the global depth.
+    Falls back to a full grow() rebuild only when the arena or the chain
+    bound cannot admit a split.  Returns (hm, how) with how in
+    {"split", "double", "rebuild"} — "double" implies a split happened
+    after the doubling."""
+    hm2, status = split_group(hm, bucket, bucket_fn=bucket_fn)
+    if status == "ok":
+        return hm2, "split"
+    if status == "need_double":
+        doubled = double_directory(hm)
+        if doubled is not None:
+            hm2, status = split_group(doubled, bucket, bucket_fn=bucket_fn)
+            if status == "ok":
+                return hm2, "double"
+            hm = doubled                           # keep the wider directory
+    return grow(hm, bucket_fn=bucket_fn), "rebuild"
+
+
+def insert_extendible(hm: HashMem, keys: jax.Array, vals: jax.Array,
+                      bucket_fn: Optional[BucketFn] = None,
+                      max_splits: int = 256, max_grows: int = 8,
+                      events: Optional[dict] = None):
+    """Host-level insert loop for resize="extendible": refused elements
+    trigger per-GROUP splits (plus directory doublings) instead of a
+    stop-the-world rehash; a full grow() rebuild remains the bounded
+    fallback.  Returns (new_hm, ok (B,) bool).  ``events`` (optional dict)
+    accumulates "splits"/"doublings"/"rebuilds" counts for telemetry."""
     import numpy as np
     keys = jnp.asarray(keys).astype(U32)
     vals = jnp.asarray(vals).astype(U32)
     n = keys.shape[0]
-    cfg = hm.config
-    grows = 0
-    if cfg.auto_grow:
-        cap = cfg.num_pages * cfg.slots_per_page
-        live = int(live_count(hm))
-        while (live + n) > cfg.max_load_factor * cap and grows < max_grows:
-            hm = grow(hm, bucket_fn=bucket_fn)
-            cfg = hm.config
-            cap = cfg.num_pages * cfg.slots_per_page
-            grows += 1
-
     ok = np.zeros((n,), bool)
     remaining = np.arange(n)
+    splits = grows = 0
     while remaining.size:
         kr, vr = keys[remaining], vals[remaining]
         if bucket_fn is None:
@@ -934,10 +1128,82 @@ def insert_auto(hm: HashMem, keys: jax.Array, vals: jax.Array,
         remaining = remaining[~ok_np]
         if remaining.size == 0:
             break
-        if not hm.config.auto_grow or grows >= max_grows:
+        if splits >= max_splits or grows > max_grows:
+            break
+        # split every refused group once, then retry the residue; each
+        # successful split strictly deepens a group, so the loop terminates
+        for b0 in np.unique(np.asarray(br)[~ok_np]):
+            if splits >= max_splits or grows > max_grows:
+                break
+            hm, how = grow_extendible(hm, int(b0), bucket_fn=bucket_fn)
+            splits += 1
+            if how == "rebuild":
+                grows += 1
+            if events is not None:
+                key = {"split": "splits", "double": "doublings",
+                       "rebuild": "rebuilds"}[how]
+                events[key] = events.get(key, 0) + 1
+                if how == "double":
+                    events["splits"] = events.get("splits", 0) + 1
+    return hm, jnp.asarray(ok)
+
+
+def insert_auto(hm: HashMem, keys: jax.Array, vals: jax.Array,
+                bucket_fn: Optional[BucketFn] = None, max_grows: int = 8,
+                events: Optional[dict] = None):
+    """Host-level insert with auto-grow (NOT jit-compatible: growth changes
+    array shapes).  Grows proactively when the batch would exceed
+    config.max_load_factor and reactively while any element fails — the two
+    loops draw on SEPARATE ``max_grows`` budgets (a proactive doubling must
+    never starve the reactive repair of an ok=False batch into a spurious
+    refusal).  Under resize="extendible" the reactive path splits the
+    refused groups (insert_extendible) instead of rebuilding.  Returns
+    (new_hm, ok (B,) bool) — ok is all-True unless growth was
+    exhausted/disabled."""
+    import numpy as np
+    keys = jnp.asarray(keys).astype(U32)
+    vals = jnp.asarray(vals).astype(U32)
+    n = keys.shape[0]
+    cfg = hm.config
+    if cfg.auto_grow:
+        proactive = 0
+        cap = cfg.num_pages * cfg.slots_per_page
+        live = int(live_count(hm))
+        while (live + n) > cfg.max_load_factor * cap \
+                and proactive < max_grows:
+            hm = grow(hm, bucket_fn=bucket_fn)
+            cfg = hm.config
+            cap = cfg.num_pages * cfg.slots_per_page
+            proactive += 1
+            if events is not None:
+                events["rebuilds"] = events.get("rebuilds", 0) + 1
+
+    if cfg.resize == "extendible" and cfg.auto_grow:
+        return insert_extendible(hm, keys, vals, bucket_fn=bucket_fn,
+                                 max_grows=max_grows, events=events)
+
+    ok = np.zeros((n,), bool)
+    remaining = np.arange(n)
+    reactive = 0
+    while remaining.size:
+        kr, vr = keys[remaining], vals[remaining]
+        if bucket_fn is None:
+            br = hash_to_bucket(kr, hm.config.num_buckets, hm.config.hash_fn,
+                                hm.config.salt)
+        else:
+            br = bucket_fn(kr, hm.config)
+        hm, ok_r = insert_with_buckets(hm, kr, vr, br)
+        ok_np = np.asarray(ok_r)
+        ok[remaining[ok_np]] = True
+        remaining = remaining[~ok_np]
+        if remaining.size == 0:
+            break
+        if not hm.config.auto_grow or reactive >= max_grows:
             break
         hm = grow(hm, bucket_fn=bucket_fn)
-        grows += 1
+        reactive += 1
+        if events is not None:
+            events["rebuilds"] = events.get("rebuilds", 0) + 1
     return hm, jnp.asarray(ok)
 
 
@@ -973,4 +1239,12 @@ def stats(hm: HashMem) -> dict:
         "stash_live": stash_live,
         "stash_tombstones": stash_tomb,
         "stash_fill": stash_fill,
-    }
+    } | ({
+        # extendible-resize telemetry: directory size == num_buckets;
+        # local depths read at the group-head pages the directory points to
+        "global_depth": bits_used(cfg.num_buckets),
+        "min_local_depth": int(np.asarray(
+            hm.store.local_depth[hm.bucket_head]).min()),
+        "max_local_depth": int(np.asarray(
+            hm.store.local_depth[hm.bucket_head]).max()),
+    } if hm.store.local_depth is not None else {})

@@ -66,7 +66,7 @@ VAL_LANE = 1
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=["pool", "planes", "page_next", "page_fill", "free_top",
-                      "fprints", "stash", "stash_fill"],
+                      "fprints", "stash", "stash_fill", "local_depth"],
          meta_fields=["key_bits", "fp_bits"])
 @dataclass
 class PageStore:
@@ -88,6 +88,10 @@ class PageStore:
     fprints: Optional[jax.Array] = None   # (num_pages, fp_bits, slots//32)
     stash: Optional[jax.Array] = None     # (stash_slots, 2) uint32 | None
     stash_fill: Optional[jax.Array] = None  # () int32 bump pointer | None
+    local_depth: Optional[jax.Array] = None  # (num_pages,) int32 extendible
+                                  # local depth, meaningful at group HEAD
+                                  # pages (hashmap.py "extendible resize");
+                                  # None when resize="rebuild"
     fp_bits: int = 0              # static: fingerprint width (0 = lane off)
 
     # -- thin split views (external callers / differential harness) --------
@@ -151,12 +155,15 @@ class PageStore:
 
 def empty_store(num_pages: int, slots: int, key_bits: int = 32,
                 with_planes: bool = False, fp_bits: int = 0,
-                stash_slots: int = 0) -> PageStore:
+                stash_slots: int = 0,
+                local_depth: Optional[int] = None) -> PageStore:
     """Fresh PageStore: every key EMPTY, every value 0, no chains.
 
     ``fp_bits > 0`` allocates the fingerprint lane (initialized to the
     fingerprint of EMPTY_KEY in every slot, matching the pool);
-    ``stash_slots > 0`` allocates the stash (keys EMPTY, fill 0)."""
+    ``stash_slots > 0`` allocates the stash (keys EMPTY, fill 0);
+    ``local_depth`` (an int) allocates the extendible-hashing depth lane
+    filled with that initial depth (= the table's global depth)."""
     pool = empty_pool(num_pages, slots)
     planes = pack_bitplanes(pool[..., KEY_LANE], key_bits) if with_planes \
         else None
@@ -169,6 +176,9 @@ def empty_store(num_pages: int, slots: int, key_bits: int = 32,
         stash = jnp.broadcast_to(jnp.array([EMPTY_KEY, 0], dtype=U32),
                                  (stash_slots, 2))
         stash_fill = jnp.asarray(0, dtype=I32)
+    depths = None
+    if local_depth is not None:
+        depths = jnp.full((num_pages,), local_depth, dtype=I32)
     return PageStore(
         pool=pool,
         planes=planes,
@@ -179,6 +189,7 @@ def empty_store(num_pages: int, slots: int, key_bits: int = 32,
         fprints=fprints,
         stash=stash,
         stash_fill=stash_fill,
+        local_depth=depths,
         fp_bits=fp_bits,
     )
 

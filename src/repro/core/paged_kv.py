@@ -255,6 +255,17 @@ class PageTableManager:
         this once per tick, so page-table round trips stay O(1) in the number
         of admitted requests).  Returns {seq_id: (n_blocks,) int32 phys}."""
         from repro.core import hashmap
+        from repro.core.hashing import validate_user_keys
+        # decode-path key-domain guard (same shared check as the serving
+        # engine's submit/preload): a seq-derived key reaching the reserved
+        # pad/sentinel range would silently become routing padding/EMPTY —
+        # checked BEFORE any page is claimed so a rejected request leaks
+        # nothing.  Each request's largest key is at its last block.
+        if reqs:
+            validate_user_keys(
+                np.asarray([self._key(s, max(n - 1, 0))
+                            for s, n, _ in reqs], np.int64),
+                where="page-table alloc")
         phys, keys, spans = [], [], []
         for seq_id, n_blocks, group in reqs:
             start = len(phys)
@@ -279,11 +290,13 @@ class PageTableManager:
         if self.cfg.auto_grow:
             # arena exhaustion / chain overflow in the page table triggers a
             # resize instead of a dropped allocation (hashmap.py docstring)
-            before = self.hm.config.num_buckets
+            before = self.hm.config.num_pages
             self.hm, ok = hashmap.insert_auto(
                 self.hm, jnp.asarray(keys, jnp.uint32),
                 jnp.asarray(phys, jnp.uint32))
-            if self.hm.config.num_buckets != before:
+            if self.hm.config.num_pages != before:   # arena REBUILT (an
+                # extendible directory doubling keeps num_pages — and every
+                # tombstone — in place, so it must not reset the count)
                 self.grow_events += 1
                 self.cfg = self.hm.config
                 self._tombstones = 0                # grow rebuild dropped them

@@ -9,7 +9,15 @@ padding: the fingerprint pre-pass (hashmap._fp_filter) blanks pages whose
 fingerprint lane holds no match, and the displaced resolve blanks the H2
 chain head when it aliases the H1 direct page.  The Pallas backends turn
 interior holes into row-buffer hits via the forward-filled fetch index
-(kernels/ref.fill_fetch_pages); the ref oracle simply masks them."""
+(kernels/ref.fill_fetch_pages); the ref oracle simply masks them.
+
+Extendible resize (config.resize="extendible") is INVISIBLE here: the
+bucket_head gather in hashmap.resolve_pages_by_bucket already IS the
+extendible directory indirection (with pow2 num_buckets the bucket id is
+the low-bits hash prefix = directory index, and directory entries aliasing
+one group share the same chain head).  A probe under extendible mode costs
+exactly the same one head gather + chain walk — no extra row activation —
+so all four backends run unchanged through splits and directory doublings."""
 from __future__ import annotations
 
 from repro.kernels import ops

@@ -149,17 +149,31 @@ def _local_bucket_fn(num_shards: int, shard_by: str = "mod"):
 
 def insert_sharded(hm_stacked, keys, vals, cfg: HashMemConfig,
                    num_shards: int, max_grows: int = 4,
-                   shard_by: str = "mod"):
+                   shard_by: str = "mod", max_splits: int = 256,
+                   events: Optional[dict] = None):
     """Host-level routed insert into the stacked shard pytree.
 
     Keys are routed to their owner shard (same global-hash split as
-    build_sharded) and batch-inserted with the vectorized engine.  When any
-    shard reports PR_ERROR and cfg.auto_grow is set, ALL shards grow by the
-    same factor — the stacked pytree must stay shape-homogeneous to remain
-    shardable over the mesh axis — and the failed elements retry.
+    build_sharded) and batch-inserted with the vectorized engine.  When a
+    shard reports PR_ERROR and cfg.auto_grow is set, the repair depends on
+    ``cfg.resize``:
+
+      * "rebuild" — ALL shards grow by the same factor (the stacked pytree
+        must stay shape-homogeneous to remain shardable over the mesh axis)
+        and the failed elements retry.
+      * "extendible" — the failed GROUPS on the failed shards split
+        (hashmap.split_group): a split is shape-preserving, so it is a
+        purely LOCAL per-shard mutation — the other shards' pytree leaves
+        are untouched and stacking stays homogeneous.  Only a directory
+        doubling (bucket_head reallocates, cfg.num_buckets changes) must be
+        synchronized across all shards, and it moves no slot data on any of
+        them.  A split the arena/chain bound refuses falls back to a
+        synchronized grow() rebuild.
 
     Returns (hm_stacked', ok (N,) bool, cfg').  cfg' differs from cfg after
-    growth; pass it to subsequent probe_sharded/insert_sharded calls.
+    growth/doubling; pass it to subsequent probe_sharded/insert_sharded
+    calls.  ``events`` (optional dict) accumulates "splits"/"doublings"/
+    "rebuilds" counts.
     """
     keys = jnp.asarray(keys).astype(U32)
     vals = jnp.asarray(vals).astype(U32)
@@ -169,29 +183,71 @@ def insert_sharded(hm_stacked, keys, vals, cfg: HashMemConfig,
     bfn = _local_bucket_fn(num_shards, shard_by)
     shards = [jax.tree.map(lambda x, d=d: x[d], hm_stacked)
               for d in range(num_shards)]
+    extendible = cfg.resize == "extendible"
+
+    def _bump(k):
+        if events is not None:
+            events[k] = events.get(k, 0) + 1
 
     ok = np.zeros((n,), bool)
     remaining = {d: np.nonzero(owner_np == d)[0] for d in range(num_shards)}
-    grows = 0
+    grows = splits = 0
     while True:
         any_fail = False
+        failed_buckets: dict = {}
         for d in range(num_shards):
             idx = remaining[d]
             if idx.size == 0:
                 continue
             kd, vd = keys[idx], vals[idx]
-            hm_d, ok_d = hashmap.insert_with_buckets(
-                shards[d], kd, vd, bfn(kd, shards[d].config))
+            bd = bfn(kd, shards[d].config)
+            hm_d, ok_d = hashmap.insert_with_buckets(shards[d], kd, vd, bd)
             shards[d] = hm_d
             ok_np = np.asarray(ok_d)
             ok[idx[ok_np]] = True
             remaining[d] = idx[~ok_np]
-            any_fail |= remaining[d].size > 0
-        if not any_fail or not cfg.auto_grow or grows >= max_grows:
+            if remaining[d].size:
+                any_fail = True
+                failed_buckets[d] = np.unique(np.asarray(bd)[~ok_np])
+        if not any_fail or not cfg.auto_grow:
             break
-        # synchronized growth keeps every shard the same shape
-        shards = [hashmap.grow(s, bucket_fn=bfn) for s in shards]
-        grows += 1
+        rebuild = not extendible
+        if extendible and splits < max_splits:
+            # split the refused groups in place — local, shape-preserving
+            need_double = False
+            progressed = False
+            for d, bks in failed_buckets.items():
+                for b0 in bks:
+                    hm2, status = hashmap.split_group(shards[d], int(b0),
+                                                      bucket_fn=bfn)
+                    if status == "ok":
+                        shards[d] = hm2
+                        splits += 1
+                        progressed = True
+                        _bump("splits")
+                    elif status == "need_double":
+                        need_double = True
+                    else:                         # "full" | "stuck"
+                        rebuild = True
+            if need_double and not rebuild:
+                doubled = [hashmap.double_directory(s) for s in shards]
+                if all(x is not None for x in doubled):
+                    shards = doubled            # synchronized pointer copy
+                    progressed = True
+                    _bump("doublings")
+                else:                           # arena can't cede pages
+                    rebuild = True
+            if not progressed and not rebuild:
+                rebuild = True                  # nothing moved: escalate
+        elif extendible:
+            rebuild = True                      # split budget exhausted
+        if rebuild:
+            if grows >= max_grows:
+                break
+            # synchronized growth keeps every shard the same shape
+            shards = [hashmap.grow(s, bucket_fn=bfn) for s in shards]
+            grows += 1
+            _bump("rebuilds")
 
     hm_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
     return hm_stacked, jnp.asarray(ok), shards[0].config
@@ -417,9 +473,13 @@ def routing_cap(keys, cfg: HashMemConfig, num_shards: int,
 
     The result is rounded up to a multiple of ``quantum`` (bounds the set
     of compiled capacities to Q_local/quantum per batch shape) and clamped
-    to [min(quantum, Q_local), Q_local].  Rounding is UP, so the capacity
-    can never truncate; on a skewed tick it tracks the measured max instead
-    of the worst-case Q_local the unfused path pads to.
+    to [min(quantum, Q_local), Q_local].  The ORDER matters: the quantum
+    floor applies first and the Q_local ceiling LAST, so a tiny batch
+    (Q_local < quantum) caps at Q_local — a cap above Q_local would trace
+    an all_to_all buffer larger than the (num_shards, Q_local) source
+    slice.  Rounding is UP, so the capacity can never truncate; on a
+    skewed tick it tracks the measured max instead of the worst-case
+    Q_local the unfused path pads to.
     """
     k = np.asarray(keys, np.uint32)
     q = k.shape[0]
@@ -433,7 +493,9 @@ def routing_cap(keys, cfg: HashMemConfig, num_shards: int,
         pair = (src * num_shards + owner)[valid]
         mx = int(np.bincount(pair, minlength=num_shards * num_shards).max())
     cap = max(quantum, -(-mx // quantum) * quantum)
-    return min(cap, q_local)
+    cap = min(cap, q_local)                 # ceiling wins over the floor
+    assert cap <= q_local, (cap, q_local)
+    return cap
 
 
 def _tick_shard_fn(cfg, num_shards, axis, shard_by, caps):

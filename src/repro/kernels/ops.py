@@ -7,6 +7,11 @@ filtered pages); the Pallas wrappers derive a forward-filled fetch index so
 those steps cost no row activation.  ``interpret`` defaults to True off-TPU
 (this container validates the kernel bodies in interpret mode; on a real
 v5e the same calls lower to Mosaic).
+
+These kernels never see the bucket directory: extendible-mode probes
+resolve their page schedule through the same bucket_head gather as rebuild
+mode (core/probe.py module docstring), so the kernel interface — (pool,
+queries, pages) — is identical under both resize modes and across splits.
 """
 from __future__ import annotations
 

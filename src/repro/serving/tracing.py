@@ -55,7 +55,10 @@ SPAN_NAMES = (
     "pipeline_stall",  # write-claim fence flush (depth>=2)
     "admit",           # completion sweep + slot refill
     "sample",          # throttled chain/rows-activated telemetry
-    "grow", "compact", "preload",
+    "grow",            # drain-time PR_ERROR repair, resize="rebuild"
+    "split",           # same repair point, resize="extendible": per-group
+                       # split/doubling — inline, NO pipeline flush
+    "compact", "preload",
 )
 INSTANT_NAMES = ("kill", "write_fence", "deferred_write", "profiler_start",
                  "profiler_stop")

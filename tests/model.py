@@ -13,7 +13,12 @@ Mirrors the exact observable semantics of ``repro.core.hashmap``:
     checks agreement of the *stored* state, while the harness separately
     asserts ok patterns where capacity is known.
 
-The model is deliberately dumb: a dict of FIFO value lists.
+The model is deliberately dumb: a dict of FIFO value lists.  Resize
+internals — full grow() rebuilds AND extendible group splits / directory
+doublings — are invisible to it by design: a replayed schedule must
+produce bit-identical results whether the engine rebuilt, split, or never
+resized at all, which is exactly what makes the replay a differential
+witness for split-during-pipelined-schedule runs (sharded_driver.grow_smoke).
 """
 from __future__ import annotations
 
@@ -166,6 +171,42 @@ def make_engine_schedule(seed: int, n_requests: int = 24,
                 ops.append(("rmw", key(), v))
             else:
                 ops.append(("scan", key(), int(rng.integers(1, 4))))
+        streams.append(ops)
+    return streams
+
+
+def make_insert_heavy_schedule(seed: int, n_requests: int = 48,
+                               ops_per_request: int = 3, keyspace: int = 96,
+                               zipf_theta: float = 0.0,
+                               insert_frac: float = 0.5):
+    """Insert-dominated request streams — the growth-forcing counterpart of
+    ``make_engine_schedule``, shared by the grow/split differential smokes
+    and the p99-under-growth bench.  ``insert_frac`` of ops are inserts;
+    the rest split 2:2:1 update/read/delete.  ``zipf_theta`` > 0 skews the
+    key choice so chain overflow concentrates on hot buckets (the case
+    where an extendible split beats a full rebuild)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    if zipf_theta > 0:
+        ranks = np.arange(1, keyspace + 1, dtype=np.float64)
+        w = 1.0 / ranks ** zipf_theta
+        w /= w.sum()
+    else:
+        w = None
+    rest = (1.0 - insert_frac) / 5.0
+    probs = [insert_frac, 2 * rest, 2 * rest, rest]
+    streams = []
+    for _ in range(n_requests):
+        ops = []
+        for _ in range(ops_per_request):
+            k = int(rng.choice(keyspace, p=w))
+            v = int(rng.integers(1, 2**20))
+            kind = ["insert", "update", "read", "delete"][
+                int(rng.choice(4, p=probs))]
+            ops.append({"insert": ("insert", k, v),
+                        "update": ("update", k, v),
+                        "read": ("read", k),
+                        "delete": ("delete", k)}[kind])
         streams.append(ops)
     return streams
 

@@ -28,7 +28,9 @@ from repro.core import rlu
 from repro.launch.mesh import make_serving_mesh
 from repro.serving import Request, ServingEngine
 
-from model import DictModel, make_engine_schedule, replay_schedule_against_model
+from model import (DictModel, make_engine_schedule,
+                   make_insert_heavy_schedule,
+                   replay_schedule_against_model)
 
 
 def _cfg(auto_grow: bool = True, displaced: bool = False) -> HashMemConfig:
@@ -201,6 +203,54 @@ def grow_under_pipeline(seed: int = 5):
     assert counts == {k: len(v) for k, v in model.d.items()}, \
         "grow duplicated keys"
     print("GROW-UNDER-PIPELINE OK", eng.grow_events, "grows,",
+          eng.stall_events, "stalls")
+
+
+def grow_smoke(trace_out: str = "", seed: int = 9):
+    """`make grow-smoke`: extendible resize under a pipelined mesh schedule.
+
+    2 forced devices, pipeline depth 2, tiny extendible table, insert-heavy
+    streams that overflow hot chains — forcing >= 2 group splits (plus
+    directory doublings) to repair mid-pipeline refused inserts.  Checked
+    three ways: results bit-equal to the host-shard reference engine, the
+    recorded schedule replays exactly against the DictModel, and the trace
+    (written to ``trace_out`` for trace_report.py) must contain "split"
+    spans and NO "grow" span — a split repairs inline without rebuilding
+    any shard or flushing the pipeline."""
+    mesh = make_serving_mesh()
+    # the arena is sized so splits alone absorb the whole stream: a split
+    # leaks its old chain pages (pim_malloc stays a bump pointer; compact()
+    # reclaims), so overflow_pages must cover live data + leak slack —
+    # otherwise the run degrades to the grow() rebuild fallback the trace
+    # assertion is here to forbid
+    cfg = HashMemConfig(num_buckets=4, slots_per_page=4, overflow_pages=60,
+                        max_chain=2, backend="ref", auto_grow=True,
+                        resize="extendible", max_load_factor=1.0)
+    streams = make_insert_heavy_schedule(seed, n_requests=48,
+                                         ops_per_request=3, keyspace=96,
+                                         zipf_theta=0.6)
+
+    ref_eng, ref = run_streams(streams, cfg=cfg, num_shards=2)
+    eng = ServingEngine(cfg, mesh=mesh, max_slots=8, pipeline_depth=2,
+                        record_schedule=True, trace=bool(trace_out))
+    reqs = [Request(ops=list(ops)) for ops in streams]
+    eng.submit_all(reqs)
+    eng.run()
+    results = [r.results for r in reqs]
+
+    assert eng.split_events >= 2, \
+        f"schedule never forced >= 2 splits (got {eng.split_events})"
+    assert eng.grow_events == 0, \
+        f"extendible run fell back to {eng.grow_events} full rebuild(s)"
+    assert results == ref, "extendible mesh run diverged from host reference"
+    model = replay_schedule_against_model(eng.schedule, DictModel())
+    check_shard_state(eng, model)
+    st = eng.stats()
+    assert st["resize"] == "extendible" and st["split_events"] >= 2, st
+    if trace_out:
+        eng.export_trace(trace_out)
+    print("GROW-SMOKE OK", eng.split_events, "splits,",
+          eng.directory_doublings, "doublings,", eng.grow_events, "rebuilds,",
           eng.stall_events, "stalls")
 
 

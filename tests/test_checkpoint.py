@@ -1,4 +1,8 @@
 import json
+import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -6,6 +10,24 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import Checkpointer
+
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def run_sub(code: str, devices: int = 2, timeout: int = 600):
+    """Subprocess with forced host devices (same pattern as
+    test_serving_sharded.py) — keeps the main pytest process on the single
+    real CPU device."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), os.path.join(ROOT, "tests")])
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
 
 
 def tree(seed=0):
@@ -60,3 +82,148 @@ def test_atomicity_no_partial_dir(tmp_path):
     ck = Checkpointer(str(tmp_path), async_save=False)
     ck.save(1, tree())
     assert not list(tmp_path.glob("tmp.*"))
+
+
+# ---------------------------------------------------------------------------
+# HashMem round-trips: the serving-table pytree with ALL optional lanes
+# (fingerprints, stash, stash_fill/free_top scalars) must survive
+# save -> restore bit-exactly, including onto a different mesh topology
+# ---------------------------------------------------------------------------
+
+def _displaced_cfg():
+    from repro.configs.base import HashMemConfig
+    return HashMemConfig(num_buckets=16, slots_per_page=32,
+                         overflow_pages=16, max_chain=1, backend="ref",
+                         fingerprint_bits=8, displacement=True,
+                         stash_slots=32)
+
+
+def test_hashmem_displaced_roundtrip_bitexact(tmp_path):
+    """A displaced+stash HashMem (fingerprint lane, stash lane, stash_fill
+    and free_top scalars all populated) round-trips through the
+    checkpointer with bit-identical leaves AND bit-identical probe
+    results."""
+    from repro.core import hashmap
+    from model import mine_bucket_colliding_keys
+
+    cfg = _displaced_cfg()
+    # same-H2 colliders defeat displacement: the chain fills, the overflow
+    # lands in the stash, so stash_fill > 0 is actually exercised
+    keys = mine_bucket_colliding_keys(36, cfg.num_buckets, same_b2=True)
+    vals = np.arange(1, 37, dtype=np.uint32) * 5
+    hm, ok = hashmap.insert(hashmap.create(cfg), jnp.asarray(keys),
+                            jnp.asarray(vals))
+    assert bool(np.asarray(ok).all())
+    assert int(np.asarray(hm.store.stash_fill)) > 0
+
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(11, hm)
+    got = ck.restore(11, hashmap.create(cfg))
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(hm)[0],
+            jax.tree_util.tree_flatten_with_path(got)[0]):
+        assert pa == pb
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), str(pa))
+
+    qs = np.concatenate([keys, keys + 7_000_000]).astype(np.uint32)
+    v0, f0 = hashmap.probe(hm, jnp.asarray(qs))
+    v1, f1 = hashmap.probe(got, jnp.asarray(qs))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(f0), np.asarray(f1))
+    assert bool(np.asarray(f1)[:36].all())
+
+
+def test_hashmem_extendible_roundtrip_keeps_directory(tmp_path):
+    """An extendible table that has split (uneven local depths, leaked
+    pages, widened directory) restores with the directory and depth lane
+    intact — probes resolve through the restored directory bit-exactly."""
+    from repro.configs.base import HashMemConfig
+    from repro.core import hashmap
+    from model import mine_bucket_colliding_keys
+
+    cfg = HashMemConfig(num_buckets=8, slots_per_page=4, overflow_pages=120,
+                        max_chain=2, backend="ref", auto_grow=True,
+                        resize="extendible", max_load_factor=1.0)
+    keys = mine_bucket_colliding_keys(20, cfg.num_buckets, same_b2=False)
+    events: dict = {}
+    hm, ok = hashmap.insert_extendible(
+        hashmap.create(cfg), jnp.asarray(keys),
+        jnp.arange(1, 21, dtype=jnp.uint32), events=events)
+    assert bool(np.asarray(ok).all()) and events.get("splits", 0) >= 1
+
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(4, hm)
+    # the directory WIDTH is config-derived: restore targets the grown cfg
+    got = ck.restore(4, hashmap.create(hm.config))
+    np.testing.assert_array_equal(np.asarray(hm.bucket_head),
+                                  np.asarray(got.bucket_head))
+    np.testing.assert_array_equal(np.asarray(hm.store.local_depth),
+                                  np.asarray(got.store.local_depth))
+    st = hashmap.stats(got)
+    assert st["max_local_depth"] > st["min_local_depth"]
+    v, f = hashmap.probe(got, jnp.asarray(keys))
+    assert bool(np.asarray(f).all())
+    np.testing.assert_array_equal(np.asarray(v),
+                                  np.arange(1, 21, dtype=np.uint32))
+
+
+def test_hashmem_elastic_restore_onto_mesh(tmp_path):
+    """Elastic restore: a stacked 2-shard displaced table saved from the
+    single-device host process restores onto a 2-forced-device mesh (one
+    shard per device via the stacked-HashMem specs) and answers the same
+    probes bit-exactly through the sharded RLU path."""
+    from repro.core import hashmap, rlu
+    from model import mine_bucket_colliding_keys
+
+    cfg = _displaced_cfg()
+    rng = np.random.default_rng(3)
+    keys = np.unique(rng.integers(1, 1 << 30, 64).astype(np.uint32))
+    vals = (keys * 3 + 1).astype(np.uint32)
+    hm = rlu.build_sharded(cfg, jnp.asarray(keys), jnp.asarray(vals), 2,
+                           shard_by="highbits")
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(1, hm)
+
+    # expected results computed in THIS process (host, 1 real device)
+    qs = np.concatenate([keys, keys + 9_000_000]).astype(np.uint32)
+    qs = qs[:(qs.size // 2) * 2]
+    np.save(tmp_path / "queries.npy", qs)
+    shards = [jax.tree.map(lambda x: x[d], hm) for d in range(2)]
+    run_sub(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.checkpoint import Checkpointer
+        from repro.core import hashmap, rlu
+        from repro.distributed.sharding import named, stacked_hashmem_specs
+        from repro.launch.mesh import make_serving_mesh
+        from test_checkpoint import _displaced_cfg
+
+        cfg = _displaced_cfg()
+        mesh = make_serving_mesh(2)
+        target = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[hashmap.create(cfg) for _ in range(2)])
+        ck = Checkpointer({str(tmp_path)!r}, async_save=False)
+        hm = ck.restore(1, target,
+                        shardings=named(mesh, stacked_hashmem_specs(target)))
+        # one shard per device along the model axis
+        leaf = jax.tree_util.tree_leaves(hm)[0]
+        assert len(leaf.sharding.device_set) == 2, leaf.sharding
+        qs = np.load({str(tmp_path / 'queries.npy')!r})
+        v, f = rlu.probe_sharded(mesh, hm, jnp.asarray(qs), cfg,
+                                 shard_by="highbits")
+        np.save({str(tmp_path / 'got_v.npy')!r}, np.asarray(v))
+        np.save({str(tmp_path / 'got_f.npy')!r}, np.asarray(f))
+        print("OK")
+        """)
+    got_v = np.load(tmp_path / "got_v.npy")
+    got_f = np.load(tmp_path / "got_f.npy")
+    # bit-compare against per-shard host probes at the owner of each query
+    owner = np.asarray(rlu.owner_of(jnp.asarray(qs), cfg, 2,
+                                    shard_by="highbits"))
+    for d in range(2):
+        m = owner == d
+        if not m.any():
+            continue
+        ev, ef = hashmap.probe(shards[d], jnp.asarray(qs[m]))
+        np.testing.assert_array_equal(got_v[m], np.asarray(ev))
+        np.testing.assert_array_equal(got_f[m], np.asarray(ef))
+    assert got_f[:keys.size].all() and not got_f[keys.size:].any()

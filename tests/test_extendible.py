@@ -1,0 +1,356 @@
+"""Extendible (directory-based) resize: split/double invariants, the
+four-backend differential, and the insert_auto grow-budget semantics.
+
+The structural claim under test: with resize="extendible" an overflowing
+GROUP splits alone (re-bucketing only its own live entries into one newly
+allocated page region) and the directory doubles by pointer copy — every
+other group's pages, chain links and directory entries are bit-identical
+before and after, so probes of untouched keys cannot observe a resize.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HashMemConfig
+from repro.core import hashmap
+from repro.core.hashing import bits_used, hash_to_bucket
+
+from model import DictModel, mine_bucket_colliding_keys
+
+
+def _cfg(**kw):
+    base = dict(num_buckets=8, slots_per_page=4, overflow_pages=120,
+                max_chain=4, backend="ref", auto_grow=True,
+                resize="extendible", max_load_factor=1.0)
+    base.update(kw)
+    return HashMemConfig(**base)
+
+
+def _probe_all(hm, keys):
+    vals, found = hashmap.probe(hm, jnp.asarray(keys, jnp.uint32))
+    return np.asarray(vals), np.asarray(found)
+
+
+# ---------------------------------------------------------------------------
+# Config validation
+# ---------------------------------------------------------------------------
+
+def test_resize_knob_validation():
+    with pytest.raises(ValueError, match="unknown resize"):
+        hashmap.create(_cfg(resize="incremental"))
+    with pytest.raises(ValueError, match="extendible"):
+        hashmap.create(_cfg(displacement=True))
+    with pytest.raises(ValueError, match="extendible"):
+        hashmap.create(_cfg(stash_slots=32))
+    with pytest.raises(ValueError, match="power-of-two"):
+        hashmap.create(_cfg(num_buckets=6))
+    # rebuild mode keeps accepting all of those shapes
+    hashmap.create(_cfg(resize="rebuild", displacement=True,
+                        fingerprint_bits=8, stash_slots=32,
+                        slots_per_page=32, num_buckets=6))
+
+
+# ---------------------------------------------------------------------------
+# Directory doubling: pointer copy, shape-invariant, probe-invisible
+# ---------------------------------------------------------------------------
+
+def test_double_directory_is_pointer_copy():
+    cfg = _cfg()
+    keys = jnp.arange(1, 33, dtype=jnp.uint32)
+    vals = keys * 3
+    hm, ok = hashmap.insert(hashmap.create(cfg), keys, vals)
+    assert bool(np.asarray(ok).all())
+
+    hm2 = hashmap.double_directory(hm)
+    assert hm2 is not None
+    assert hm2.config.num_buckets == 2 * cfg.num_buckets
+    # num_pages (and with it every store array shape) is INVARIANT
+    assert hm2.config.num_pages == cfg.num_pages
+    assert hm2.store.pool.shape == hm.store.pool.shape
+    np.testing.assert_array_equal(
+        np.asarray(hm2.bucket_head),
+        np.concatenate([np.asarray(hm.bucket_head)] * 2))
+    # local depths unchanged -> global depth grew past them
+    st = hashmap.stats(hm2)
+    assert st["global_depth"] == bits_used(cfg.num_buckets) + 1
+    assert st["max_local_depth"] == bits_used(cfg.num_buckets)
+    # probe-invisible: same values/found through the doubled directory
+    v1, f1 = _probe_all(hm, keys)
+    v2, f2 = _probe_all(hm2, keys)
+    np.testing.assert_array_equal(v1, v2)
+    np.testing.assert_array_equal(f1, f2)
+    assert f2.all()
+
+
+def test_double_directory_refuses_when_arena_too_small():
+    # overflow arena cannot cede num_buckets pages of accounting
+    hm = hashmap.create(_cfg(num_buckets=16, overflow_pages=8))
+    assert hashmap.double_directory(hm) is None
+
+
+# ---------------------------------------------------------------------------
+# split_group: statuses and locality
+# ---------------------------------------------------------------------------
+
+def test_split_group_statuses_and_locality():
+    cfg = _cfg(max_chain=2, overflow_pages=56)
+    # every freshly created group sits at local depth == global depth
+    hm = hashmap.create(cfg)
+    hm1, status = hashmap.split_group(hm, 0)
+    assert status == "need_double" and hm1 is hm
+
+    # mine keys sharing one bucket mod 8 (but generically differing on the
+    # next hash bit), overflow that group's chain, then split it
+    keys = mine_bucket_colliding_keys(8, cfg.num_buckets, same_b2=False)
+    vals = np.arange(1, 9, dtype=np.uint32) * 7
+    hm, ok = hashmap.insert(hm, jnp.asarray(keys), jnp.asarray(vals))
+    assert bool(np.asarray(ok).all())
+    b0 = int(np.asarray(hash_to_bucket(jnp.asarray(keys), cfg.num_buckets,
+                                       cfg.hash_fn, cfg.salt))[0])
+
+    hm = hashmap.double_directory(hm)
+    assert hm is not None
+    heads_before = np.asarray(hm.bucket_head).copy()
+    pool_before = np.asarray(hm.store.pool).copy()
+
+    # the split may only touch the old chain's pages (cleared) and the pages
+    # it allocates at the bump pointer — record both regions up front
+    ld = bits_used(cfg.num_buckets)                 # pre-split local depth
+    c = b0 & ((1 << ld) - 1)
+    old_pages, p = [], int(heads_before[c])
+    pn = np.asarray(hm.store.page_next)
+    while p >= 0:
+        old_pages.append(p)
+        p = int(pn[p])
+    top_before = int(hm.store.free_top)
+
+    hm2, status = hashmap.split_group(hm, b0)
+    assert status == "ok"
+    # directory: exactly the aliases of the split group were repointed
+    gd = bits_used(hm2.config.num_buckets)
+    aliases = c + (np.arange(1 << (gd - ld)) << ld)
+    untouched = np.setdiff1d(np.arange(hm2.config.num_buckets), aliases)
+    np.testing.assert_array_equal(np.asarray(hm2.bucket_head)[untouched],
+                                  heads_before[untouched])
+    # both children report depth ld+1
+    ch = np.asarray(hm2.bucket_head)[aliases]
+    np.testing.assert_array_equal(
+        np.asarray(hm2.store.local_depth)[ch], ld + 1)
+    # every OTHER group's pages are bit-identical (split is LOCAL)
+    touched = set(old_pages) | set(range(top_before,
+                                         int(hm2.store.free_top)))
+    other = np.setdiff1d(np.arange(cfg.num_pages),
+                         np.asarray(sorted(touched)))
+    np.testing.assert_array_equal(np.asarray(hm2.store.pool)[other],
+                                  pool_before[other])
+    # all entries survived the split with their values
+    v, f = _probe_all(hm2, keys)
+    assert f.all()
+    np.testing.assert_array_equal(v, vals)
+    st = hashmap.stats(hm2)
+    assert st["min_local_depth"] == ld and st["max_local_depth"] == ld + 1
+
+
+def test_split_group_stuck_full_and_rebuild_fallback():
+    cfg = _cfg(max_chain=2, num_buckets=8, overflow_pages=56)
+    # keys colliding mod 64 share every split bit up to depth 6: a depth-3
+    # split routes ALL of them to one child
+    keys = mine_bucket_colliding_keys(8, 64, same_b2=False)
+    hm, ok = hashmap.insert(hashmap.create(cfg), jnp.asarray(keys),
+                            jnp.arange(1, 9, dtype=jnp.uint32))
+    assert bool(np.asarray(ok).all())
+    b0 = int(np.asarray(hash_to_bucket(jnp.asarray(keys), cfg.num_buckets,
+                                       cfg.hash_fn, cfg.salt))[0])
+    hm = hashmap.double_directory(hm)
+    assert hm is not None
+
+    # with the chain bound tightened under the live population, the one
+    # child cannot exist -> "stuck" (pre-flight refuses, no mutation)
+    tight = hashmap.HashMem(
+        store=hm.store, bucket_head=hm.bucket_head,
+        config=dataclasses.replace(hm.config, max_chain=1))
+    _, status = hashmap.split_group(tight, b0)
+    assert status == "stuck"
+
+    # an exhausted bump arena refuses the split outright -> "full"
+    full = hashmap.HashMem(
+        store=dataclasses.replace(
+            hm.store, free_top=jnp.asarray(hm.config.num_pages, jnp.int32)),
+        bucket_head=hm.bucket_head, config=hm.config)
+    _, status = hashmap.split_group(full, b0)
+    assert status == "full"
+
+    # grow_extendible on the full table falls back to a genuine rebuild
+    # (the only path that adds pages) and still answers every probe
+    hm2, how = hashmap.grow_extendible(full, b0)
+    assert how == "rebuild"
+    assert hm2.config.num_pages > hm.config.num_pages
+    _, f = _probe_all(hm2, keys)
+    assert f.all()
+
+
+# ---------------------------------------------------------------------------
+# insert_extendible: splits instead of rebuilds; duplicate FIFO survives
+# ---------------------------------------------------------------------------
+
+def test_insert_extendible_splits_not_rebuilds():
+    cfg = _cfg(max_chain=2, slots_per_page=4, num_buckets=8,
+               overflow_pages=120)
+    keys = mine_bucket_colliding_keys(24, cfg.num_buckets, same_b2=False)
+    vals = np.arange(1, 25, dtype=np.uint32)
+    events: dict = {}
+    hm, ok = hashmap.insert_extendible(
+        hashmap.create(cfg), jnp.asarray(keys), jnp.asarray(vals),
+        events=events)
+    assert bool(np.asarray(ok).all())
+    assert events.get("splits", 0) >= 1
+    assert events.get("rebuilds", 0) == 0
+    assert hm.config.num_pages == cfg.num_pages        # never rebuilt
+    v, f = _probe_all(hm, keys)
+    assert f.all()
+    np.testing.assert_array_equal(v, vals)
+    st = hashmap.stats(hm)
+    assert st["max_local_depth"] > bits_used(cfg.num_buckets)
+
+
+def test_duplicate_fifo_order_survives_splits():
+    cfg = _cfg(max_chain=2, num_buckets=8, overflow_pages=120)
+    keys = mine_bucket_colliding_keys(20, cfg.num_buckets, same_b2=False)
+    dup = int(keys[0])
+    hm = hashmap.create(cfg)
+    # oldest duplicate first, then force splits over the same group
+    hm, ok = hashmap.insert(hm, jnp.asarray([dup], jnp.uint32),
+                            jnp.asarray([111], jnp.uint32))
+    assert bool(np.asarray(ok).all())
+    hm, ok = hashmap.insert_extendible(
+        hm, jnp.asarray(keys[1:]), jnp.arange(1, 20, dtype=jnp.uint32))
+    assert bool(np.asarray(ok).all())
+    hm, ok = hashmap.insert_extendible(
+        hm, jnp.asarray([dup], jnp.uint32), jnp.asarray([222], jnp.uint32))
+    assert bool(np.asarray(ok).all())
+    v, f = _probe_all(hm, [dup])
+    assert f[0] and v[0] == 111                      # oldest wins
+    hm, found = hashmap.delete(hm, jnp.asarray([dup], jnp.uint32))
+    assert bool(np.asarray(found)[0])
+    v, f = _probe_all(hm, [dup])
+    assert f[0] and v[0] == 222                      # FIFO successor
+
+
+def test_rebuild_under_extendible_resets_directory_and_reclaims():
+    cfg = _cfg(max_chain=2, num_buckets=8, overflow_pages=120)
+    keys = mine_bucket_colliding_keys(24, cfg.num_buckets, same_b2=False)
+    hm, ok = hashmap.insert_extendible(
+        hashmap.create(cfg), jnp.asarray(keys),
+        jnp.arange(1, 25, dtype=jnp.uint32))
+    assert bool(np.asarray(ok).all())
+    hm2 = hashmap.compact(hm)
+    st = hashmap.stats(hm2)
+    # directory flat again: every group back at the global depth
+    assert st["min_local_depth"] == st["max_local_depth"] \
+        == st["global_depth"]
+    # pages leaked by the splits' bump allocation were reclaimed: the bump
+    # pointer sits exactly at directory + strictly-needed overflow
+    cfg2 = hm2.config
+    overflow_needed = int(np.maximum(st["chain_lengths"] - 1, 0).sum())
+    assert st["free_pages"] == \
+        cfg2.num_pages - cfg2.num_buckets - overflow_needed
+    _, f = _probe_all(hm2, keys)
+    assert f.all()
+
+
+# ---------------------------------------------------------------------------
+# Four-backend differential: churn through splits/doublings vs DictModel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "perf", "area", "bitserial"])
+def test_extendible_churn_differential(backend):
+    # bitserial packs bit-planes 32-slots-per-word: S must be a multiple of
+    # 32, so it gets a 1-page chain bound to keep group capacity small
+    # enough that the mined colliders below still force splits
+    S, mc = (32, 1) if backend == "bitserial" else (4, 3)
+    cfg = _cfg(backend=backend, slots_per_page=S, num_buckets=8,
+               overflow_pages=248, max_chain=mc)
+    colliders = mine_bucket_colliding_keys(48, cfg.num_buckets,
+                                           same_b2=False)
+    rng = np.random.default_rng(17)
+    hm = hashmap.create(cfg)
+    model = DictModel()
+    events: dict = {}
+    for step in range(8):
+        # uniform churn plus 6 mined same-group keys per step: the hot
+        # group overflows its chain bound and must split mid-churn
+        ins = np.concatenate([
+            rng.integers(1, 4000, size=12, dtype=np.uint32),
+            colliders[6 * step:6 * (step + 1)]])
+        vals = rng.integers(1, 2**20, size=ins.size, dtype=np.uint32)
+        hm, ok = hashmap.insert_auto(hm, jnp.asarray(ins), jnp.asarray(vals),
+                                     events=events)
+        model.insert(ins, vals, np.asarray(ok))
+        dels = rng.integers(1, 4000, size=4, dtype=np.uint32)
+        hm, found = hashmap.delete(hm, jnp.asarray(dels))
+        exp_found = model.delete(dels)
+        np.testing.assert_array_equal(np.asarray(found), exp_found)
+        qs = np.concatenate([ins[:8], dels,
+                             rng.integers(1, 4000, size=6, dtype=np.uint32)])
+        v, f = _probe_all(hm, qs)
+        ev, ef = model.probe(qs)
+        np.testing.assert_array_equal(f, ef)
+        np.testing.assert_array_equal(v[f], np.asarray(ev)[f])
+    assert events.get("splits", 0) >= 1
+    assert events.get("rebuilds", 0) == 0, \
+        "extendible churn should repair by splitting, not rebuilding"
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: insert_auto draws proactive and reactive grows from SEPARATE
+# budgets — a load-factor doubling must not starve the reactive repair
+# ---------------------------------------------------------------------------
+
+def test_insert_auto_separate_proactive_reactive_budgets():
+    # identity hash for exact bucket control: bucket = key % num_buckets
+    cfg = HashMemConfig(num_buckets=4, slots_per_page=4, overflow_pages=4,
+                        max_chain=1, backend="ref", auto_grow=True,
+                        hash_fn="identity", max_load_factor=0.5)
+    hm = hashmap.create(cfg)
+    # fill to 14/32 live — under the 0.5 load bar, spread across buckets
+    pre = np.arange(14, dtype=np.uint32)
+    hm, ok = hashmap.insert_auto(hm, jnp.asarray(pre),
+                                 jnp.asarray(pre + 100))
+    assert bool(np.asarray(ok).all())
+    assert hm.config.num_buckets == 4                 # no grow yet
+
+    # 5 keys congruent mod 16: the batch (a) crosses the 0.5 load bar ->
+    # exactly ONE proactive doubling (nb 4 -> 8), then (b) all 5 land in one
+    # depth-3 bucket of capacity 4 -> TWO reactive doublings (nb 8 -> 32)
+    # before they separate mod 32.  A shared max_grows=2 budget would refuse
+    # the last key; separate budgets repair it.
+    batch = np.asarray([15, 31, 47, 63, 79], np.uint32)
+    events: dict = {}
+    hm, ok = hashmap.insert_auto(hm, jnp.asarray(batch),
+                                 jnp.asarray(batch * 2), max_grows=2,
+                                 events=events)
+    assert bool(np.asarray(ok).all()), \
+        "reactive repair was starved by the proactive grow budget"
+    assert hm.config.num_buckets == 32
+    assert events.get("rebuilds", 0) == 3             # 1 proactive + 2 reactive
+    v, f = _probe_all(hm, np.concatenate([pre, batch]))
+    assert f.all()
+    np.testing.assert_array_equal(
+        v, np.concatenate([pre + 100, batch * 2]))
+
+
+def test_insert_auto_reactive_budget_still_bounds():
+    # with max_grows=0 the reactive loop must refuse rather than spin
+    cfg = HashMemConfig(num_buckets=4, slots_per_page=2, overflow_pages=4,
+                        max_chain=1, backend="ref", auto_grow=True,
+                        hash_fn="identity", max_load_factor=1.0)
+    batch = np.asarray([3, 7, 11], np.uint32)          # all bucket 3, cap 2
+    hm, ok = hashmap.insert_auto(hashmap.create(cfg), jnp.asarray(batch),
+                                 jnp.asarray(batch), max_grows=0)
+    ok = np.asarray(ok)
+    assert ok.sum() == 2                            # page holds 2 of the 3
+    assert hm.config.num_buckets == 4               # no grow happened

@@ -110,6 +110,39 @@ def test_tenant_keys_bounded_by_tenant_space():
     assert ok.results[1]["found"] and ok.results[1]["value"] == 3
 
 
+def test_page_table_alloc_rejects_reserved_keys():
+    """Decode-path regression: the paged-KV page-table allocator derives
+    hashmap keys as seq_id * MAX_BLOCKS + block, so a large seq_id (or a
+    long sequence under one) used to walk the key into the reserved
+    pad/sentinel range and the block silently became unprobeable.  The
+    shared validate_user_keys check now rejects the request BEFORE any
+    page is claimed."""
+    from repro.core.paged_kv import PageTableManager
+
+    pt = PageTableManager(total_pages=16, num_channels=2)
+    free_before = [len(a) for a in pt.free]
+    mb = PageTableManager.MAX_BLOCKS
+
+    # the last block's key lands exactly on the reserved floor
+    seq_hot = 0xFFFFFFF0 // mb                      # key(seq, 4080) == floor
+    with pytest.raises(ValueError, match="reserved"):
+        pt.alloc_seqs([(seq_hot, (0xFFFFFFF0 % mb) + 1, 0)])
+    # a seq_id whose FIRST key already overflows uint32 entirely
+    with pytest.raises(ValueError, match="reserved"):
+        pt.alloc_seq((1 << 32) // mb, 1)
+    # rejection in a coalesced batch: the valid sibling is not admitted
+    # either and, crucially, NO page leaked from any arena
+    with pytest.raises(ValueError, match="reserved"):
+        pt.alloc_seqs([(3, 2, 0), (seq_hot, (0xFFFFFFF0 % mb) + 1, 0)])
+    assert [len(a) for a in pt.free] == free_before
+    assert pt.owned == {}
+
+    # the same large seq_id allocates fine while its keys stay below the
+    # floor (key(seq_hot, 0) = 0xFFFFF000), as does the valid sibling
+    tbl = pt.alloc_seqs([(seq_hot, 1, 0), (3, 2, 0)])
+    assert len(tbl[seq_hot]) == 1 and len(tbl[3]) == 2
+
+
 def test_unknown_op_kind_rejected():
     eng = ServingEngine(_cfg(), max_slots=4)
     with pytest.raises(ValueError, match="unknown op kind"):

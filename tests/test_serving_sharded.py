@@ -228,6 +228,64 @@ def test_fused_worst_skew_never_truncates():
         """)
 
 
+def test_fused_tick_tiny_batches():
+    """Q_local in {1, 4}: the routing cap's quantum floor must clamp to the
+    Q_local ceiling LAST (a cap above Q_local would trace an all_to_all
+    buffer larger than the (D, Q_local) source slice), and the fused tick
+    at those shapes stays bit-identical to the single-table reference."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from sharded_driver import _cfg
+        from repro.core import hashmap, rlu
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh()
+        cfg = _cfg()
+        D = mesh.shape["model"]
+        rng = np.random.default_rng(5)
+        for q_local in (1, 4):
+            Q = D * q_local
+            keys = rng.integers(1, 1 << 31, Q).astype(np.uint32)
+            for sb in ("highbits", "mod"):
+                cap = rlu.routing_cap(keys, cfg, D, shard_by=sb)
+                # quantum floor (8) first, Q_local ceiling last -> a tiny
+                # batch caps at exactly min(8, Q_local)
+                assert cap == min(8, q_local), (q_local, sb, cap)
+            # fused tick at the tiny shape: insert, then probe + delete
+            shards = [hashmap.create(cfg) for _ in range(D)]
+            hm = jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+            vals = (keys * 7 + 1).astype(np.uint32)
+            pad = jnp.full((Q,), rlu.ROUTE_PAD, jnp.uint32)
+            hm, _, _, _, ok = rlu.tick_mesh(
+                mesh, hm, pad, pad, jnp.asarray(keys), jnp.asarray(vals),
+                cfg, shard_by="highbits")
+            assert bool(np.asarray(ok).all())
+            hm, pv, pf, df, _ = rlu.tick_mesh(
+                mesh, hm, jnp.asarray(keys), jnp.asarray(keys[::-1].copy()),
+                pad, pad, cfg, shard_by="highbits")
+            assert bool(np.asarray(pf).all())
+            assert bool(np.asarray(df).all())
+            np.testing.assert_array_equal(np.asarray(pv), vals)
+            # deletes landed: a second probe finds nothing
+            _, _, pf2, _, _ = rlu.tick_mesh(
+                mesh, hm, jnp.asarray(keys), pad, pad, pad, cfg,
+                shard_by="highbits")
+            assert not bool(np.asarray(pf2).any())
+        print("OK")
+        """)
+
+
+def test_split_during_pipelined_schedule():
+    """Extendible-resize acceptance: an insert-heavy zipfian stream on a
+    2-device mesh with pipeline depth 2 forces >= 2 group splits
+    mid-pipeline; results stay bit-identical to the host reference and the
+    DictModel replay, with ZERO full-rebuild grow events (the same driver
+    `make grow-smoke` runs, plus trace-level span assertions there)."""
+    run_sub("""
+        from sharded_driver import grow_smoke
+        grow_smoke()
+        """)
+
+
 def test_sharded_differential_sweep_block0():
     """100+ randomized schedules, pipelining off and on, uniform+zipfian."""
     run_sub("""

@@ -36,7 +36,7 @@ import sys
 DEFAULT_WINDOW = 5
 
 LOWER_BETTER = ("us_per", "ms", "ns_per", "wall_seconds", "calls_per_tick",
-                "rows_activated", "trace_overhead")
+                "rows_activated", "trace_overhead", "p99_growth_ratio")
 HIGHER_BETTER = ("ops_per_sec", "speedup")
 # wall-clock noise-dominated or workload-dependent fields we never guard
 SKIP = ("request_latency", "tick_ms", "wall_seconds", "route_cap",
@@ -50,14 +50,19 @@ SKIP = ("request_latency", "tick_ms", "wall_seconds", "route_cap",
 # (the fused launch-count contract) deliberately stays on the tight band.
 NOISY = ("vec_us_per_elem", "scan_us_per_elem", "us_per_probe", "grow_ms",
          "ns_per_live_entry", "ops_per_sec", "serving_speedup",
-         "speedup_coalesced")
+         "speedup_coalesced", "p99_growth_ratio")
 NOISY_FACTOR = 2.0
 # absolute (run-independent) ceilings, keyed by the metric's FIELD name
 # (the part after the row prefix), all lower-better: ``trace_overhead`` is
 # the traced/untraced ops-per-sec ratio from serving_bench — the ISSUE-9
-# bar says enabling tracing may cost at most 10% throughput.  Unlike the
-# windowed relative check, these fire even on a metric's first appearance.
-ABS_BARS = {"trace_overhead": 1.10}
+# bar says enabling tracing may cost at most 10% throughput.
+# ``p99_growth_ratio`` is the extendible/rebuild p99-under-growth latency
+# ratio — the latency-bounded-growth acceptance bar: an extendible split
+# must keep tail latency STRICTLY below the stop-the-world rebuild's (the
+# 0.999 ceiling is "strictly below" with float headroom; in practice the
+# ratio sits far under it).  Unlike the windowed relative check, these
+# fire even on a metric's first appearance.
+ABS_BARS = {"trace_overhead": 1.10, "p99_growth_ratio": 0.999}
 
 
 def _direction(key: str):

@@ -34,7 +34,7 @@ from collections import defaultdict
 # engine span vocabulary (tracing.SPAN_NAMES), used for breakdown ordering
 PHASE_ORDER = ("gather", "route", "probe", "delete", "insert", "fused_tick",
                "writeback", "pipeline_stall", "admit", "sample", "grow",
-               "compact", "preload")
+               "split", "compact", "preload")
 
 
 def load_events(path: str) -> tuple:
@@ -171,6 +171,11 @@ def main(argv=None) -> int:
                     help="slowest ticks to attribute (default 5)")
     ap.add_argument("--assert-spans", default="",
                     help="comma-separated span names that must appear")
+    ap.add_argument("--forbid-spans", default="",
+                    help="comma-separated span names that must NOT appear "
+                         "(grow-smoke forbids 'grow' and 'pipeline_stall': "
+                         "an extendible split must repair inline, neither "
+                         "rebuilding the table nor flushing the pipeline)")
     ap.add_argument("--assert-stalls", type=int, default=0,
                     help="minimum pipeline_stall span count")
     args = ap.parse_args(argv)
@@ -182,6 +187,11 @@ def main(argv=None) -> int:
         if want.strip() not in seen:
             print(f"ASSERT FAILED: span {want.strip()!r} not in trace "
                   f"(saw {sorted(seen)})")
+            ok = False
+    for bad in filter(None, args.forbid_spans.split(",")):
+        if bad.strip() in seen:
+            print(f"ASSERT FAILED: forbidden span {bad.strip()!r} appears "
+                  f"in trace")
             ok = False
     stalls = sum(1 for s in spans if s[0] == "pipeline_stall")
     if stalls < args.assert_stalls:
